@@ -1,0 +1,95 @@
+"""Paper Tables 6-13 analogue: classifier metrics + generation scores of
+HuSCF-GAN vs baselines per scenario, on the synthetic multi-domain
+benchmark (real MNIST-family data is unavailable offline; DESIGN.md §7).
+
+CPU budget: scenario sizes and epochs shrink via `scale`. The paper's
+claims validated here are *relative*: HuSCF >= baselines in multi-domain
+non-IID settings, and clustering drives the win.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.baselines import ALL_BASELINES, BaselineConfig
+from repro.core import HuSCFConfig, HuSCFTrainer, PAPER_DEVICES
+from repro.data import build_scenario, make_class_balanced
+from repro.metrics import dataset_score, evaluate, fid
+from repro.models.classifier import (features, predict, predict_proba,
+                                     train_classifier)
+
+
+def evaluate_trainer(tr, domains: List[str], n_gen: int = 600,
+                     seed: int = 0) -> Dict[str, Dict[str, float]]:
+    """Train a CNN on generated data, evaluate on real per-domain test
+    sets; also dataset score + FID vs per-domain scoring classifiers."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, n_gen).astype(np.int32)
+    gen_imgs, gen_labs = tr.generate(8, labels)
+    out = {}
+    clf_gen = train_classifier(jax.random.PRNGKey(7), gen_imgs, gen_labs,
+                               epochs=4)
+    for dom in domains:
+        test_i, test_l = make_class_balanced(dom, 30, seed=123)
+        rep = evaluate(test_l, predict(clf_gen, test_i))
+        # dataset-specific scoring classifier (trained on real data)
+        score_i, score_l = make_class_balanced(dom, 60, seed=5)
+        clf_real = train_classifier(jax.random.PRNGKey(8), score_i, score_l,
+                                    epochs=4)
+        gen_score = dataset_score(predict_proba(clf_real, gen_imgs))
+        f = fid(features(clf_real, score_i), features(clf_real, gen_imgs))
+        out[dom] = {"accuracy": rep.accuracy, "f1": rep.f1,
+                    "fpr": rep.fpr, "score": gen_score, "fid": f}
+    return out
+
+
+SCENARIO_DOMAINS = {
+    "1dom_iid": ["gratings"], "1dom_noniid": ["gratings"],
+    "2dom_iid": ["gratings", "blobs"], "2dom_noniid": ["gratings", "blobs"],
+    "2dom_highly_noniid": ["gratings", "blobs"],
+    "4dom_iid": ["gratings", "blobs", "checkers", "rings"],
+    "2dom_medical": ["rings", "checkers"],
+    "2dom_highres": ["checkers", "blobs"],
+}
+
+
+def run_scenario(scenario: str, *, num_clients: int = 6, base_size: int = 96,
+                 epochs: int = 4, batch: int = 16,
+                 algos=("huscf", "fedgan", "mdgan"), seed: int = 0
+                 ) -> Dict[str, Dict]:
+    clients = build_scenario(scenario, num_clients=num_clients,
+                             base_size=base_size, seed=seed)
+    devices = [PAPER_DEVICES[i % 7] for i in range(num_clients)]
+    domains = SCENARIO_DOMAINS[scenario]
+    results = {}
+    for algo in algos:
+        t0 = time.time()
+        if algo == "huscf":
+            tr = HuSCFTrainer(clients, devices,
+                              config=HuSCFConfig(batch=batch,
+                                                 federate_every=2, seed=seed))
+        else:
+            tr = ALL_BASELINES[algo](clients, BaselineConfig(
+                batch=batch, federate_every=2, seed=seed))
+        for _ in range(epochs):
+            tr.train_epoch()
+        results[algo] = {"metrics": evaluate_trainer(tr, domains),
+                         "wall_s": time.time() - t0}
+    return results
+
+
+def run(report, fast: bool = True):
+    scenarios = ["2dom_noniid"] if fast else list(SCENARIO_DOMAINS)
+    algos = ("huscf", "fedgan", "mdgan") if fast else \
+        ("huscf",) + tuple(sorted(ALL_BASELINES))
+    for sc in scenarios:
+        res = run_scenario(sc, algos=algos)
+        for algo, r in res.items():
+            for dom, m in r["metrics"].items():
+                report(f"quality/{sc}/{algo}/{dom}",
+                       r["wall_s"] * 1e6 / max(1, 1),
+                       f"acc={m['accuracy']:.3f} f1={m['f1']:.3f} "
+                       f"score={m['score']:.2f} fid={m['fid']:.1f}")

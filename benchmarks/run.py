@@ -1,0 +1,77 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
+``python -m benchmarks.run [--full] [--only SECTION]``
+
+Sections:
+  latency   — paper Tables 15/16/24/27 (analytic, exact reproduction)
+  kernels   — Pallas kernel micro-benches
+  quality   — paper Tables 6-13 analogue on synthetic multi-domain data
+  kld       — paper Table 17 (activation vs label KLD)
+  ablation  — paper Table 23 (component ablation)
+  roofline  — derived roofline terms from results/dryrun.jsonl (if present)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def _report(name: str, value: float, derived: str = "") -> None:
+    print(f"{name},{value:.3f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="all scenarios/algorithms (slow on CPU)")
+    ap.add_argument("--only", default=None, help="run a single section")
+    args = ap.parse_args()
+
+    sections = ["latency", "kernels", "quality", "kld", "ablation",
+                "roofline"]
+    if args.only:
+        sections = [args.only]
+
+    t_start = time.time()
+    print("name,us_per_call,derived")
+    if "latency" in sections:
+        from benchmarks import latency_table
+        latency_table.run(_report)
+    if "kernels" in sections:
+        from benchmarks import kernel_bench
+        kernel_bench.run(_report)
+    if "quality" in sections:
+        from benchmarks import quality_scenarios
+        quality_scenarios.run(_report, fast=not args.full)
+    if "kld" in sections:
+        from benchmarks import kld_comparison
+        kld_comparison.run(_report)
+    if "ablation" in sections:
+        from benchmarks import ablation_components
+        ablation_components.run(_report)
+    if "roofline" in sections:
+        path = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+        if os.path.exists(path):
+            from repro.launch.roofline import analyze_record, load
+            for rec in sorted(load(path),
+                              key=lambda r: (r["arch"], r["shape"])):
+                a = analyze_record(rec)
+                if a is None:
+                    continue
+                mesh = "2pod" if rec["multi_pod"] else "1pod"
+                _report(f"roofline/{a['arch']}/{a['shape']}/{mesh}",
+                        a["bound_s"] * 1e6,
+                        f"dom={a['dominant']} useful={a['useful_ratio']:.2f}")
+        else:
+            print("# roofline: results/dryrun.jsonl missing — run "
+                  "python -m repro.launch.dryrun --all first",
+                  file=sys.stderr)
+    print(f"# total wall: {time.time() - t_start:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: HuSCF-GAN end-to-end in ~2 minutes on CPU.
+
+Trains the paper's split-federated cGAN on a small two-domain non-IID
+population, runs a clustered federation round, and evaluates generation
+quality with the paper's metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import HuSCFConfig, HuSCFTrainer, PAPER_DEVICES
+from repro.data import build_scenario, make_class_balanced
+from repro.metrics import dataset_score, evaluate
+from repro.models.classifier import predict, predict_proba, train_classifier
+
+
+def main():
+    # 1. a heterogeneous population: 6 clients, 2 domains, non-IID
+    clients = build_scenario("2dom_noniid", num_clients=6, base_size=96,
+                             seed=0)
+    devices = [PAPER_DEVICES[i % 7] for i in range(6)]
+
+    # 2. the five-stage HuSCF pipeline (GA cuts -> split training ->
+    #    clustering -> KLD federation)
+    tr = HuSCFTrainer(clients, devices,
+                      config=HuSCFConfig(batch=16, federate_every=2, seed=0))
+    print(f"GA-selected cuts give latency-model {tr.ga_latency:.2f} s/iter "
+          f"across {len(tr.groups)} device-profile groups")
+    for epoch in range(4):
+        m = tr.train_epoch()
+        print(f"epoch {epoch + 1}: loss_d={m['loss_d']:.3f} "
+              f"loss_g={m['loss_g']:.3f}")
+    diag = tr.federate()
+    print(f"clustered federation: k={diag['k']} "
+          f"silhouette={diag['silhouette']:.3f}")
+
+    # 3. evaluate: classifier trained purely on generated data
+    labels = np.arange(300) % 10
+    gen_imgs, gen_labs = tr.generate(8, labels)
+    clf = train_classifier(jax.random.PRNGKey(1), gen_imgs, gen_labs,
+                           epochs=3)
+    test_i, test_l = make_class_balanced("gratings", 20, seed=9)
+    rep = evaluate(test_l, predict(clf, test_i))
+    score = dataset_score(predict_proba(clf, gen_imgs))
+    print(f"classifier-on-generated: {rep}")
+    print(f"dataset score: {score:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Example 4 — the paper's technique applied beyond GANs (§7.3): train
+an assigned LM with heterogeneous U-shaped split learning + clustered
+KLD federation. Two device profiles (weak/strong) hold different head/
+tail depths; the trunk is shared on the server.
+
+    PYTHONPATH=src python examples/split_lm_training.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.split_transformer import (default_groups, federate_split_lm,
+                                          init_split_lm,
+                                          make_split_train_step)
+from repro.data.tokens import lm_batches
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"), n_layers=6)
+    groups = default_groups(cfg, n_weak=2, n_strong=2)
+    params = init_split_lm(jax.random.PRNGKey(0), cfg, groups)
+    step, opt_init = make_split_train_step(cfg, groups, lr=3e-4)
+    opt = opt_init(params)
+    step = jax.jit(step)
+
+    gens = {g.name: lm_batches(cfg.vocab, g.n_clients * 2, 32,
+                               seed=hash(g.name) % 1000) for g in groups}
+    print(f"population: " + ", ".join(
+        f"{g.name}(K={g.n_clients}, head={g.cut_head}, tail={g.cut_tail})"
+        for g in groups))
+    for it in range(12):
+        batch = {"tokens": {}, "labels": {}}
+        for g in groups:
+            toks, labs = next(gens[g.name])
+            batch["tokens"][g.name] = jnp.asarray(
+                toks.reshape(g.n_clients, 2, 32))
+            batch["labels"][g.name] = jnp.asarray(
+                labs.reshape(g.n_clients, 2, 32))
+        params, opt, m = step(params, opt, batch)
+        if it % 3 == 0:
+            print(f"iter {it}: loss={float(m['loss']):.4f}")
+        if it == 7:  # a federation round (uniform weights, 2 clusters)
+            weights = np.full(4, 0.5)
+            labels = np.array([0, 0, 1, 1])
+            params = federate_split_lm(params, groups, weights, labels)
+            print("federated client segments (2 clusters)")
+    print(f"final loss: {float(m['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

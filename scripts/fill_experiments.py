@@ -1,0 +1,83 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from
+results/*.jsonl artifacts. Idempotent: replaces the <!-- MARK --> spans.
+
+    PYTHONPATH=src python scripts/fill_experiments.py
+"""
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.roofline import analyze_record, load, markdown_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def dryrun_summary(rows):
+    ok = sum(1 for r in rows if "cost" in r)
+    sk = sum(1 for r in rows if "skipped" in r)
+    er = sum(1 for r in rows if "error" in r)
+    over = [r for r in rows if r.get("memory", {}).get("peak_bytes", 0)
+            > 16 * 2 ** 30]
+    lines = [f"Latest matrix: **{ok} compiled OK, {sk} skipped by design, "
+             f"{er} errors** (out of {len(rows)} records)."]
+    if over:
+        lines.append("Over-HBM pairs: " + ", ".join(
+            f"{r['arch']}x{r['shape']}" for r in over))
+    else:
+        lines.append("Every compiled pair fits within 16 GiB/chip HBM "
+                     "(`memory_analysis` peak).")
+    # compile time stats
+    cs = [r.get("compile_s", 0) for r in rows if "cost" in r]
+    if cs:
+        lines.append(f"Compile times: median {sorted(cs)[len(cs)//2]:.0f}s, "
+                     f"max {max(cs):.0f}s (single-core CPU lowering of the "
+                     f"256/512-chip SPMD programs).")
+    return "\n".join(lines)
+
+
+def paper_mode_table(path):
+    if not os.path.exists(path):
+        return "(paper-mode dry-run not yet recorded)"
+    rows = [json.loads(l) for l in open(path)]
+    out = ["| subject | mesh | variant | HLO flops | collective B "
+           "(by type) | peak HBM |", "|---|---|---|---|---|---|"]
+    seen = {}
+    for r in rows:
+        key = (r["arch"], r["multi_pod"], r.get("variant", ""))
+        seen[key] = r
+    for (_, mp, var), r in sorted(seen.items(), key=str):
+        coll = r.get("collectives", {})
+        by_type = " ".join(f"{k}={v:.1e}" for k, v in sorted(coll.items())
+                           if k != "total")
+        out.append(
+            f"| {r['arch']} | {'2pod' if mp else '1pod'} | {var or '—'} | "
+            f"{r['cost'].get('flops', 0):.2e} | total={coll.get('total', 0):.2e} "
+            f"({by_type}) | {r['memory'].get('peak_bytes', 0)/2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def splice(text, mark, payload):
+    return re.sub(f"<!-- {mark} -->.*?(?=\n## |\n### |\\Z)",
+                  f"<!-- {mark} -->\n\n{payload}\n", text, flags=re.S)
+
+
+def main():
+    exp_path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(exp_path).read()
+    dr_path = os.path.join(ROOT, "results", "dryrun.jsonl")
+    if os.path.exists(dr_path):
+        rows = load(dr_path)
+        text = splice(text, "DRYRUN_SUMMARY", dryrun_summary(rows))
+        text = splice(text, "ROOFLINE_1POD", markdown_table(rows, False))
+        text = splice(text, "ROOFLINE_2POD", markdown_table(rows, True))
+    text = splice(text, "PAPER_MODE", paper_mode_table(
+        os.path.join(ROOT, "results", "dryrun_paper.jsonl")))
+    open(exp_path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

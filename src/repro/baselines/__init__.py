@@ -1,0 +1,14 @@
+from repro.baselines.common import BaselineConfig, PopulationTrainer
+from repro.baselines.fedgan import FedGANTrainer
+from repro.baselines.mdgan import MDGANTrainer
+from repro.baselines.fed_split_gan import FedSplitGANTrainer
+from repro.baselines.pfl_gan import PFLGANTrainer
+from repro.baselines.hfl_gan import HFLGANTrainer
+
+ALL_BASELINES = {
+    "fedgan": FedGANTrainer,
+    "mdgan": MDGANTrainer,
+    "fed_split_gan": FedSplitGANTrainer,
+    "pfl_gan": PFLGANTrainer,
+    "hfl_gan": HFLGANTrainer,
+}

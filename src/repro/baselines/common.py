@@ -1,0 +1,192 @@
+"""Shared infrastructure for the baseline distributed-GAN schemes.
+
+All baselines use the paper's cGAN (Table 3) "to ensure fairness".
+The core building block is a *population* of K full local cGANs held as
+stacked pytrees and trained with one vmapped jitted step; schemes differ
+in what is shared/aggregated and when.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import ClientSpec
+from repro.models import gan
+from repro.models.gan import Z_DIM
+from repro.models.nn import tree_weighted_sum
+from repro.optim import adam
+
+
+@dataclasses.dataclass
+class BaselineConfig:
+    batch: int = 32
+    lr: float = 2e-4
+    adam_b1: float = 0.5
+    federate_every: int = 5
+    seed: int = 0
+    steps_per_epoch: Optional[int] = None
+
+
+def init_population(key, k: int):
+    kg, kd = jax.random.split(key)
+    gs = jax.vmap(lambda kk: _as_dict(gan.init_generator(kk)))(
+        jax.random.split(kg, k))
+    ds = jax.vmap(lambda kk: _as_dict(gan.init_discriminator(kk)))(
+        jax.random.split(kd, k))
+    return gs, ds
+
+
+def _as_dict(layers: List[Dict]) -> Dict[str, Dict]:
+    return {str(i): p for i, p in enumerate(layers)}
+
+
+def _as_list(d: Dict[str, Dict]) -> List[Dict]:
+    return [d[str(i)] for i in range(len(d))]
+
+
+def gen_forward_dict(params: Dict, z, y, train: bool):
+    out, new = gan.generator_forward(_as_list(params), z, y, train=train)
+    return out, _as_dict(new)
+
+
+def disc_forward_dict(params: Dict, img, y, train: bool):
+    out, new = gan.discriminator_forward(_as_list(params), img, y, train=train)
+    return out, _as_dict(new)
+
+
+def local_gan_step(g_params, d_params, opt_g, opt_d, batch,
+                   opt_update_g, opt_update_d):
+    """One cGAN step for a single client (to be vmapped over K)."""
+    real_img, real_y, z, fake_y = batch
+
+    def d_loss(dp):
+        fake, _ = gen_forward_dict(g_params, z, fake_y, True)
+        fake = jax.lax.stop_gradient(fake)
+        lr_, nd = disc_forward_dict(dp, real_img, real_y, True)
+        lf_, _ = disc_forward_dict(dp, fake, fake_y, True)
+        return gan.d_loss_fn(lr_, lf_), nd
+
+    (loss_d, d_bn), grads_d = jax.value_and_grad(d_loss, has_aux=True)(d_params)
+    opt_d, d_new = opt_update_d(opt_d, grads_d, d_params)
+    d_new = merge_bn(d_new, d_bn)
+
+    def g_loss(gp):
+        fake, ng = gen_forward_dict(gp, z, fake_y, True)
+        logits, _ = disc_forward_dict(d_new, fake, fake_y, True)
+        return gan.g_loss_fn(logits), ng
+
+    (loss_g, g_bn), grads_g = jax.value_and_grad(g_loss, has_aux=True)(g_params)
+    opt_g, g_new = opt_update_g(opt_g, grads_g, g_params)
+    g_new = merge_bn(g_new, g_bn)
+    return g_new, d_new, opt_g, opt_d, loss_d, loss_g
+
+
+def merge_bn(updated, bn_source):
+    flat_u = jax.tree_util.tree_flatten_with_path(updated)[0]
+    flat_b = {jax.tree_util.keystr(p): v for p, v in
+              jax.tree_util.tree_flatten_with_path(bn_source)[0]}
+    out = []
+    for path, val in flat_u:
+        ks = jax.tree_util.keystr(path)
+        out.append(flat_b.get(ks, val)
+                   if ks.endswith("['mean']") or ks.endswith("['var']") else val)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(updated), out)
+
+
+class PopulationTrainer:
+    """K independent local cGANs, vmapped. Base class for baselines."""
+
+    name = "population"
+
+    def __init__(self, clients: Sequence[ClientSpec],
+                 config: BaselineConfig = BaselineConfig()):
+        self.clients = list(clients)
+        self.cfg = config
+        self.K = len(self.clients)
+        self.sizes = np.array([c.n for c in self.clients], np.int64)
+        key = jax.random.PRNGKey(config.seed)
+        self.g_params, self.d_params = init_population(key, self.K)
+        opt_init_g, self._upd_g = adam(config.lr, b1=config.adam_b1)
+        opt_init_d, self._upd_d = adam(config.lr, b1=config.adam_b1)
+        # per-client optimizer states (vmapped init so `step` is [K])
+        self.opt_g = jax.vmap(opt_init_g)(self.g_params)
+        self.opt_d = jax.vmap(opt_init_d)(self.d_params)
+        self._rng = np.random.default_rng(config.seed + 1)
+        self.epoch = 0
+        self._step = jax.jit(self._build_step())
+
+    def _build_step(self):
+        upd_g, upd_d = self._upd_g, self._upd_d
+
+        def step(g_params, d_params, opt_g, opt_d, batch):
+            return jax.vmap(
+                lambda gp, dp, og, od, *b: local_gan_step(
+                    gp, dp, og, od, b, upd_g, upd_d)
+            )(g_params, d_params, opt_g, opt_d, *batch)
+
+        return step
+
+    def _sample_batch(self):
+        b = self.cfg.batch
+        imgs, ys = [], []
+        for c in self.clients:
+            idx = self._rng.integers(0, c.n, b)
+            imgs.append(c.images[idx])
+            ys.append(c.labels[idx])
+        z = self._rng.normal(0, 1, (self.K, b, Z_DIM)).astype(np.float32)
+        fy = self._rng.integers(0, gan.NUM_CLASSES, (self.K, b)).astype(np.int32)
+        return (np.stack(imgs), np.stack(ys), z, fy)
+
+    def train_steps(self, n: int) -> Dict[str, float]:
+        loss_d = loss_g = 0.0
+        for _ in range(n):
+            batch = self._sample_batch()
+            (self.g_params, self.d_params, self.opt_g, self.opt_d,
+             ld, lg) = self._step(self.g_params, self.d_params,
+                                  self.opt_g, self.opt_d, batch)
+            loss_d, loss_g = float(ld.mean()), float(lg.mean())
+        return {"loss_d": loss_d, "loss_g": loss_g}
+
+    def train_epoch(self) -> Dict[str, float]:
+        steps = self.cfg.steps_per_epoch or max(
+            1, int(np.median(self.sizes)) // self.cfg.batch)
+        m = self.train_steps(steps)
+        self.epoch += 1
+        if self.epoch % self.cfg.federate_every == 0:
+            self.federate()
+        return m
+
+    def federate(self) -> None:  # overridden by schemes
+        pass
+
+    # -- evaluation ---------------------------------------------------------
+    def generate(self, n_per_client_batch: int, labels: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        gen = jax.jit(lambda gp, z, y: jax.vmap(
+            lambda p, zz, yy: gen_forward_dict(p, zz, yy, False)[0]
+        )(gp, z, y))
+        imgs_all, labs_all = [], []
+        i = 0
+        while i < len(labels):
+            need = min(n_per_client_batch, max(1, -(-(len(labels) - i) // self.K)))
+            lab = np.resize(labels[i:], (self.K, need)).astype(np.int32)
+            z = self._rng.normal(0, 1, (self.K, need, Z_DIM)).astype(np.float32)
+            out = np.asarray(gen(self.g_params, z, lab)).reshape(-1, 28, 28, 1)
+            imgs_all.append(out)
+            labs_all.append(lab.reshape(-1))
+            i += out.shape[0]
+        return (np.concatenate(imgs_all)[: len(labels)],
+                np.concatenate(labs_all)[: len(labels)])
+
+
+def fedavg_population(params, weights: np.ndarray):
+    """Replace every client copy with the weighted average."""
+    w = jnp.asarray(weights / weights.sum())
+    avg = tree_weighted_sum(params, w)
+    return jax.tree_util.tree_map(
+        lambda a, x: jnp.broadcast_to(a, x.shape).astype(x.dtype), avg, params)

@@ -1,0 +1,140 @@
+"""Federated Split GANs (Kortoçi et al., 2022).
+
+Generator on the server. Each client's discriminator is *split* at a
+capability-dependent cut: D-head on the client, D-tail shared on the
+server. Client D-heads are FedAvg'd every few epochs. Synthetic images
+travel server -> client (the privacy weakness the paper calls out).
+
+Simulation: one shared cut (the scheme's median device) so heads stack;
+heterogeneous cuts are the HuSCF contribution, not this baseline's.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import (BaselineConfig, PopulationTrainer,
+                                    fedavg_population, gen_forward_dict,
+                                    merge_bn, _as_dict)
+from repro.models import gan
+from repro.models.gan import DISC_LAYER_DEFS, Z_DIM
+from repro.optim import adam
+
+D_CUT = 2  # client holds D layers [0, D_CUT); server the rest
+
+
+class FedSplitGANTrainer(PopulationTrainer):
+    name = "fed_split_gan"
+
+    def __init__(self, clients, config: BaselineConfig = BaselineConfig()):
+        super().__init__(clients, config)
+        key = jax.random.PRNGKey(config.seed + 31)
+        kg, kd = jax.random.split(key)
+        self.g_server = _as_dict(gan.init_generator(kg))
+        # d_params population: keep only head layers stacked
+        self.d_heads = {str(l): self.d_params[str(l)] for l in range(D_CUT)}
+        keys = jax.random.split(kd, len(DISC_LAYER_DEFS) - D_CUT)
+        self.d_tail = {str(l): DISC_LAYER_DEFS[l][0](keys[l - D_CUT], jnp.float32)
+                       for l in range(D_CUT, len(DISC_LAYER_DEFS))}
+        og, self._upd_gs = adam(config.lr, b1=config.adam_b1)
+        od, self._upd_dh = adam(config.lr, b1=config.adam_b1)
+        ot, self._upd_dt = adam(config.lr, b1=config.adam_b1)
+        self.opt_gs = og(self.g_server)
+        self.opt_dh = od(self.d_heads)
+        self.opt_dt = ot(self.d_tail)
+        self._step3 = jax.jit(self._build_split_step())
+
+    def _build_split_step(self):
+        n_d = len(DISC_LAYER_DEFS)
+
+        def disc_split(heads, tail, img, y, train):
+            """heads: stacked [K,...]; img [K,b,...]. Returns logits [K,b]."""
+            def head_fn(hp, im, yy):
+                x = (im, yy)
+                new = {}
+                for l in range(D_CUT):
+                    x, new[str(l)] = DISC_LAYER_DEFS[l][1](hp[str(l)], x, train)
+                return x, new
+            acts, new_heads = jax.vmap(head_fn)(heads, img, y)
+            k, b = acts.shape[0], acts.shape[1]
+            x = acts.reshape((k * b,) + acts.shape[2:])
+            new_tail = {}
+            for l in range(D_CUT, n_d):
+                x, new_tail[str(l)] = DISC_LAYER_DEFS[l][1](tail[str(l)], x, train)
+            return x.reshape(k, b), new_heads, new_tail
+
+        def step(g_server, d_heads, d_tail, opts, batch):
+            opt_gs, opt_dh, opt_dt = opts
+            real_img, real_y, z, fake_y = batch
+            k, b = real_img.shape[0], real_img.shape[1]
+
+            def d_loss(dp):
+                heads, tail = dp
+                fake, _ = gen_forward_dict(g_server, z.reshape(-1, Z_DIM),
+                                           fake_y.reshape(-1), True)
+                fake = jax.lax.stop_gradient(fake.reshape(k, b, 28, 28, 1))
+                lr_, nh, nt = disc_split(heads, tail, real_img, real_y, True)
+                lf_, _, _ = disc_split(heads, tail, fake, fake_y, True)
+                return (gan.d_loss_fn(lr_.reshape(-1), lf_.reshape(-1)),
+                        (nh, nt))
+
+            (loss_d, (h_bn, t_bn)), (gh, gt) = jax.value_and_grad(
+                d_loss, has_aux=True)((d_heads, d_tail))
+            opt_dh, heads_new = self._upd_dh(opt_dh, gh, d_heads)
+            opt_dt, tail_new = self._upd_dt(opt_dt, gt, d_tail)
+            heads_new = merge_bn(heads_new, h_bn)
+            tail_new = merge_bn(tail_new, t_bn)
+
+            def g_loss(gs):
+                fake, ng = gen_forward_dict(gs, z.reshape(-1, Z_DIM),
+                                            fake_y.reshape(-1), True)
+                fake = fake.reshape(k, b, 28, 28, 1)
+                logits, _, _ = disc_split(heads_new, tail_new, fake, fake_y, True)
+                return gan.g_loss_fn(logits.reshape(-1)), ng
+
+            (loss_g, g_bn), gg = jax.value_and_grad(g_loss, has_aux=True)(g_server)
+            opt_gs, g_new = self._upd_gs(opt_gs, gg, g_server)
+            g_new = merge_bn(g_new, g_bn)
+            return (g_new, heads_new, tail_new,
+                    (opt_gs, opt_dh, opt_dt), loss_d, loss_g)
+
+        return step
+
+    def train_steps(self, n: int) -> Dict[str, float]:
+        loss_d = loss_g = 0.0
+        for _ in range(n):
+            b = self.cfg.batch
+            imgs, ys = [], []
+            for c in self.clients:
+                idx = self._rng.integers(0, c.n, b)
+                imgs.append(c.images[idx]); ys.append(c.labels[idx])
+            z = self._rng.normal(0, 1, (self.K, b, Z_DIM)).astype(np.float32)
+            fy = self._rng.integers(0, gan.NUM_CLASSES,
+                                    (self.K, b)).astype(np.int32)
+            batch = (np.stack(imgs), np.stack(ys), z, fy)
+            (self.g_server, self.d_heads, self.d_tail,
+             opts, ld, lg) = self._step3(
+                self.g_server, self.d_heads, self.d_tail,
+                (self.opt_gs, self.opt_dh, self.opt_dt), batch)
+            self.opt_gs, self.opt_dh, self.opt_dt = opts
+            loss_d, loss_g = float(ld), float(lg)
+        return {"loss_d": loss_d, "loss_g": loss_g}
+
+    def federate(self) -> None:
+        self.d_heads = fedavg_population(self.d_heads,
+                                         self.sizes.astype(np.float64))
+
+    def generate(self, n_per_client_batch: int, labels: np.ndarray):
+        gen = jax.jit(lambda gp, z, y: gen_forward_dict(gp, z, y, False)[0])
+        out_imgs, out_labs, i = [], [], 0
+        while i < len(labels):
+            take = min(256, len(labels) - i)
+            lab = labels[i: i + take].astype(np.int32)
+            z = self._rng.normal(0, 1, (take, Z_DIM)).astype(np.float32)
+            out_imgs.append(np.asarray(gen(self.g_server, z, lab)))
+            out_labs.append(lab)
+            i += take
+        return np.concatenate(out_imgs), np.concatenate(out_labs)

@@ -1,0 +1,118 @@
+"""MD-GAN (Hardy et al., 2019).
+
+Single generator on the server; one discriminator per client. Each
+iteration the server generates two synthetic batches per client (X_d to
+train D, X_g to compute G feedback); each client updates its local D and
+returns the generator-loss gradients; the server averages them.
+Discriminators are periodically swapped between clients.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.common import (BaselineConfig, PopulationTrainer,
+                                    disc_forward_dict, gen_forward_dict,
+                                    merge_bn, _as_dict)
+from repro.data.partition import ClientSpec
+from repro.models import gan
+from repro.models.gan import Z_DIM
+from repro.optim import adam
+
+
+class MDGANTrainer(PopulationTrainer):
+    name = "mdgan"
+
+    def __init__(self, clients, config: BaselineConfig = BaselineConfig()):
+        super().__init__(clients, config)
+        # single server generator replaces the population of generators
+        key = jax.random.PRNGKey(config.seed + 17)
+        self.g_server = _as_dict(gan.init_generator(key))
+        opt_init_g, self._upd_g2 = adam(config.lr, b1=config.adam_b1)
+        self.opt_gs = opt_init_g(self.g_server)
+        self._step2 = jax.jit(self._build_mdgan_step())
+
+    def _build_mdgan_step(self):
+        upd_d, upd_g = self._upd_d, self._upd_g2
+
+        def step(g_server, d_params, opt_gs, opt_d, batch):
+            real_img, real_y, z_d, z_g, fake_y = batch
+
+            # server generates (no grad into G for the D update)
+            fake_d, _ = gen_forward_dict(g_server, z_d.reshape(-1, Z_DIM),
+                                         fake_y.reshape(-1), True)
+            fake_d = jax.lax.stop_gradient(
+                fake_d.reshape(real_img.shape[0], -1, 28, 28, 1))
+
+            def d_loss_k(dp, rimg, ry, fimg, fy):
+                lr_, nd = disc_forward_dict(dp, rimg, ry, True)
+                lf_, _ = disc_forward_dict(dp, fimg, fy, True)
+                return gan.d_loss_fn(lr_, lf_), nd
+
+            def d_update(dp, od, rimg, ry, fimg, fy):
+                (ld, nd_bn), gd = jax.value_and_grad(
+                    d_loss_k, has_aux=True)(dp, rimg, ry, fimg, fy)
+                od, dn = upd_d(od, gd, dp)
+                return merge_bn(dn, nd_bn), od, ld
+
+            d_new, opt_d, loss_d = jax.vmap(d_update)(
+                d_params, opt_d, real_img, real_y, fake_d, fake_y)
+
+            # generator feedback: mean G loss across client discriminators
+            def g_loss(gs):
+                fake_g, ng = gen_forward_dict(gs, z_g.reshape(-1, Z_DIM),
+                                              fake_y.reshape(-1), True)
+                fake_g = fake_g.reshape(real_img.shape[0], -1, 28, 28, 1)
+                logits = jax.vmap(
+                    lambda dp, fi, fy: disc_forward_dict(dp, fi, fy, True)[0]
+                )(d_new, fake_g, fake_y)
+                return gan.g_loss_fn(logits.reshape(-1)), ng
+
+            (loss_g, g_bn), grads_g = jax.value_and_grad(
+                g_loss, has_aux=True)(g_server)
+            opt_gs, g_new = upd_g(opt_gs, grads_g, g_server)
+            g_new = merge_bn(g_new, g_bn)
+            return g_new, d_new, opt_gs, opt_d, loss_d.mean(), loss_g
+
+        return step
+
+    def train_steps(self, n: int) -> Dict[str, float]:
+        loss_d = loss_g = 0.0
+        for _ in range(n):
+            b = self.cfg.batch
+            imgs, ys = [], []
+            for c in self.clients:
+                idx = self._rng.integers(0, c.n, b)
+                imgs.append(c.images[idx]); ys.append(c.labels[idx])
+            z_d = self._rng.normal(0, 1, (self.K, b, Z_DIM)).astype(np.float32)
+            z_g = self._rng.normal(0, 1, (self.K, b, Z_DIM)).astype(np.float32)
+            fy = self._rng.integers(0, gan.NUM_CLASSES, (self.K, b)).astype(np.int32)
+            batch = (np.stack(imgs), np.stack(ys), z_d, z_g, fy)
+            (self.g_server, self.d_params, self.opt_gs, self.opt_d,
+             ld, lg) = self._step2(self.g_server, self.d_params,
+                                   self.opt_gs, self.opt_d, batch)
+            loss_d, loss_g = float(ld), float(lg)
+        return {"loss_d": loss_d, "loss_g": loss_g}
+
+    def federate(self) -> None:
+        # MD-GAN swaps discriminators between clients (anti-overfitting)
+        perm = self._rng.permutation(self.K)
+        self.d_params = jax.tree_util.tree_map(lambda x: x[perm], self.d_params)
+        self.opt_d = jax.tree_util.tree_map(
+            lambda x: x[perm] if hasattr(x, "ndim") and x.ndim > 0
+            and x.shape[0] == self.K else x, self.opt_d)
+
+    def generate(self, n_per_client_batch: int, labels: np.ndarray):
+        gen = jax.jit(lambda gp, z, y: gen_forward_dict(gp, z, y, False)[0])
+        out_imgs, out_labs, i = [], [], 0
+        while i < len(labels):
+            take = min(256, len(labels) - i)
+            lab = labels[i: i + take].astype(np.int32)
+            z = self._rng.normal(0, 1, (take, Z_DIM)).astype(np.float32)
+            out_imgs.append(np.asarray(gen(self.g_server, z, lab)))
+            out_labs.append(lab)
+            i += take
+        return np.concatenate(out_imgs), np.concatenate(out_labs)

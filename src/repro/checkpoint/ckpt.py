@@ -1,0 +1,59 @@
+"""Pytree checkpointing via msgpack + raw numpy buffers.
+
+Layout-stable: a checkpoint is {treedef_repr, leaves: [{dtype, shape,
+data}]} in one msgpack file. Restores onto a template pytree so custom
+nodes (lists/dicts/NamedTuples) round-trip.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(x)
+    # store the canonical name ('bfloat16', 'float32', ...) — ml_dtypes
+    # registers the extended float types with numpy so np.dtype(name)
+    # round-trips
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    import ml_dtypes  # noqa: F401  (registers bfloat16/f8 with numpy)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])
+                         ).reshape(d["shape"])
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {"step": step, "treedef": str(treedef),
+               "leaves": [_pack_leaf(x) for x in leaves]}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, template: Any) -> tuple:
+    """Returns (tree_like_template, step). Validates structure + shapes."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if str(treedef) != payload["treedef"]:
+        raise ValueError("checkpoint treedef mismatch")
+    loaded = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(loaded) != len(t_leaves):
+        raise ValueError("checkpoint leaf count mismatch")
+    out = []
+    for got, want in zip(loaded, t_leaves):
+        if tuple(got.shape) != tuple(np.shape(want)):
+            raise ValueError(f"shape mismatch {got.shape} vs {np.shape(want)}")
+        out.append(jnp.asarray(got, dtype=want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), payload["step"]

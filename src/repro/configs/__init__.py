@@ -1,0 +1,5 @@
+from repro.configs.base import (ArchConfig, InputShape, INPUT_SHAPES,
+                                get_config, get_smoke_config, list_archs)
+
+__all__ = ["ArchConfig", "InputShape", "INPUT_SHAPES", "get_config",
+           "get_smoke_config", "list_archs"]

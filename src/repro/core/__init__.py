@@ -1,0 +1,11 @@
+from repro.core.latency import (Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER,
+                                huscf_iteration_latency, fedgan_iteration_latency,
+                                mdgan_iteration_latency, fedsplitgan_iteration_latency,
+                                hflgan_iteration_latency, pflgan_iteration_latency)
+from repro.core.genetic import GAConfig, GAResult, optimize_cuts
+from repro.core.clustering import cluster_activations, kmeans, silhouette
+from repro.core.kld import (activation_weights, label_weights, federation_weights,
+                            global_weights, kl_divergence)
+from repro.core.splitting import ProfileGroup, group_by_profile
+from repro.core.federation import federate_client_params, fedavg_uniform, weighted_average_stacked
+from repro.core.huscf import HuSCFConfig, HuSCFTrainer, build_net_apply

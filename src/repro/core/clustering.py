@@ -1,0 +1,109 @@
+"""K-means clustering of discriminator mid-layer activations — paper §4.5.
+
+Pure numpy (runs on the 'server'; K = #clients is small).  k-means++
+seeding, Lloyd iterations; the number of clusters is selected by
+silhouette score over k in [2, k_max], falling back to k=1 when the
+best silhouette is weak (single-domain populations).
+
+The inner assignment step has a Pallas TPU kernel twin
+(`repro.kernels.kmeans_assign`) used by the benchmark harness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def kmeans_pp_init(x: np.ndarray, k: int, rng: np.random.Generator) -> np.ndarray:
+    n = x.shape[0]
+    centers = [x[rng.integers(n)]]
+    for _ in range(1, k):
+        d2 = np.min(((x[:, None, :] - np.array(centers)[None]) ** 2).sum(-1), 1)
+        total = d2.sum()
+        if total <= 1e-12:
+            centers.append(x[rng.integers(n)])
+            continue
+        probs = d2 / total
+        centers.append(x[rng.choice(n, p=probs)])
+    return np.array(centers)
+
+
+def kmeans(x: np.ndarray, k: int, *, iters: int = 50, seed: int = 0
+           ) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Returns (labels [N], centers [k, D], inertia)."""
+    rng = np.random.default_rng(seed)
+    if k <= 1:
+        center = x.mean(0, keepdims=True)
+        inertia = float(((x - center) ** 2).sum())
+        return np.zeros(x.shape[0], np.int32), center, inertia
+    centers = kmeans_pp_init(x, k, rng)
+    labels = np.zeros(x.shape[0], np.int32)
+    for _ in range(iters):
+        d2 = ((x[:, None, :] - centers[None]) ** 2).sum(-1)
+        new_labels = d2.argmin(1).astype(np.int32)
+        if np.array_equal(new_labels, labels) and _ > 0:
+            break
+        labels = new_labels
+        for c in range(k):
+            mask = labels == c
+            if mask.any():
+                centers[c] = x[mask].mean(0)
+            else:  # re-seed empty cluster at the farthest point
+                centers[c] = x[d2.min(1).argmax()]
+    inertia = float(((x - centers[labels]) ** 2).sum())
+    return labels, centers, inertia
+
+
+def silhouette(x: np.ndarray, labels: np.ndarray) -> float:
+    """Mean silhouette coefficient (euclidean)."""
+    n = x.shape[0]
+    uniq = np.unique(labels)
+    if uniq.size < 2 or n < 3:
+        return -1.0
+    d = np.sqrt(np.maximum(((x[:, None, :] - x[None]) ** 2).sum(-1), 0.0))
+    s = np.zeros(n)
+    for i in range(n):
+        same = labels == labels[i]
+        same[i] = False
+        a = d[i][same].mean() if same.any() else 0.0
+        bs = [d[i][labels == c].mean() for c in uniq if c != labels[i]]
+        b = min(bs)
+        s[i] = 0.0 if max(a, b) == 0 else (b - a) / max(a, b)
+    return float(s.mean())
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    labels: np.ndarray
+    centers: np.ndarray
+    k: int
+    silhouette: float
+
+
+def cluster_activations(acts: np.ndarray, *, k: Optional[int] = None,
+                        k_max: int = 6, seed: int = 0,
+                        min_silhouette: float = 0.15) -> ClusterResult:
+    """Cluster client activation vectors [K_clients, D].
+
+    If `k` is given, use it (the paper assumes domain count detection);
+    otherwise pick k by silhouette, accepting k=1 when separation is weak.
+    """
+    # standardize (activation scales vary across training)
+    mu, sd = acts.mean(0), acts.std(0) + 1e-8
+    z = (acts - mu) / sd
+    if k is not None:
+        labels, centers, _ = kmeans(z, k, seed=seed)
+        return ClusterResult(labels, centers, k, silhouette(z, labels))
+    best: Optional[ClusterResult] = None
+    upper = min(k_max, max(2, acts.shape[0] // 2))
+    for kk in range(2, upper + 1):
+        labels, centers, _ = kmeans(z, kk, seed=seed)
+        sil = silhouette(z, labels)
+        if best is None or sil > best.silhouette:
+            best = ClusterResult(labels, centers, kk, sil)
+    if best is None or best.silhouette < min_silhouette:
+        labels, centers, _ = kmeans(z, 1, seed=seed)
+        return ClusterResult(labels, centers, 1, 0.0)
+    return best

@@ -1,0 +1,103 @@
+"""Clustered, KLD-weighted, layer-wise federated aggregation — Eq. (16).
+
+Client-side segments are aggregated *within clusters*; because cuts are
+heterogeneous, aggregation is **layer-wise over the layer's owners**:
+for model layer l and cluster C, every client k in C that holds l
+(in its head or tail) contributes its copy with weight
+s_k / sum_{owners(l) in C} s_j, and all owners receive the aggregate.
+Server-side segments are single shared copies trained on the combined
+stream (see DESIGN.md §7 for the interpretation of the paper's global
+Eq. 16 on shared parameters).
+
+The weighted reduction over the stacked client axis is the compute hot
+spot; `use_kernel=True` routes it through the Pallas `weighted_agg`
+kernel (interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.splitting import ProfileGroup, client_owned_layers, layer_pair
+
+
+def weighted_average_stacked(stacked: Any, weights: jnp.ndarray,
+                             use_kernel: bool = False) -> Any:
+    """Weighted sum over the leading client axis of every leaf.
+    `weights` must already be normalized over that axis."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return jax.tree_util.tree_map(
+            lambda x: kops.weighted_agg(x, weights), stacked)
+    w = weights.astype(jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.einsum("k,k...->...", w, x.astype(jnp.float32)
+                             ).astype(x.dtype), stacked)
+
+
+def federate_client_params(groups: Sequence[ProfileGroup],
+                           client_params: Dict[str, Dict[str, Dict[str, Any]]],
+                           weights: np.ndarray,
+                           cluster_labels: np.ndarray,
+                           n_layers: Dict[str, int] = None,
+                           use_kernel: bool = False
+                           ) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    """Aggregate client-held layers cluster-wise.
+
+    client_params: {group.name: {net: {str(layer): stacked pytree}}}
+    weights: Eq.-15 intra-cluster weights, indexed by global client id.
+    cluster_labels: cluster id per global client id.
+    Returns a new client_params with aggregated copies broadcast back.
+    """
+    n_layers = n_layers or {"G": 5, "D": 5}
+    out = jax.tree_util.tree_map(lambda x: x, client_params)  # shallow copy
+
+    for net, n_lay in n_layers.items():
+        for layer in range(n_lay):
+            # owners: (group, position-in-group, global client id)
+            owners: List = []
+            for g in groups:
+                if layer in client_owned_layers(layer_pair(g.cut, net), n_lay):
+                    for pos, cid in enumerate(g.client_ids):
+                        owners.append((g, pos, cid))
+            if not owners:
+                continue
+            # aggregate per cluster over owners
+            for c in np.unique(cluster_labels[[cid for _, _, cid in owners]]):
+                members = [(g, pos, cid) for g, pos, cid in owners
+                           if cluster_labels[cid] == c]
+                w = np.array([weights[cid] for _, _, cid in members])
+                if w.sum() <= 0:
+                    w = np.ones_like(w)
+                w = w / w.sum()
+                # gather copies -> stacked [M, ...]
+                copies = [jax.tree_util.tree_map(lambda x: x[pos],
+                                                 client_params[g.name][net][str(layer)])
+                          for g, pos, _ in members]
+                stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs), *copies)
+                agg = weighted_average_stacked(stacked, jnp.asarray(w),
+                                               use_kernel=use_kernel)
+                # scatter aggregate back to every member
+                for g, pos, _ in members:
+                    cur = out[g.name][net][str(layer)]
+                    out[g.name][net][str(layer)] = jax.tree_util.tree_map(
+                        lambda full, a: full.at[pos].set(a.astype(full.dtype)),
+                        cur, agg)
+    return out
+
+
+def fedavg_uniform(groups: Sequence[ProfileGroup],
+                   client_params: Dict[str, Dict[str, Dict[str, Any]]],
+                   sizes: np.ndarray,
+                   n_layers: Dict[str, int] = None
+                   ) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    """Vanilla FedAvg (first two federation rounds, paper §4.5):
+    single global cluster, weights proportional to dataset size."""
+    weights = sizes.astype(np.float64) / sizes.sum()
+    labels = np.zeros(len(sizes), np.int64)
+    return federate_client_params(groups, client_params, weights, labels,
+                                  n_layers=n_layers)

@@ -1,0 +1,175 @@
+"""Genetic algorithm for optimal cut-point selection — paper §4.3 + App. D.
+
+Minimizes `huscf_iteration_latency` over the joint per-client cut vector.
+Implements the paper's exact operators:
+  * tournament selection (size 5)
+  * uniform crossover and two-point crossover, alternated 50/50,
+    applied with probability `crossover_rate`
+  * per-gene mutation with probability `mutation_rate`
+  * elitism (top 2 carried over)
+  * profile-based reduction (appendix D): one gene per *device profile*,
+    upsampled to all clients for fitness evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.latency import (Cut, DeviceProfile, PAPER_SERVER,
+                                all_cut_options, huscf_iteration_latency)
+
+
+@dataclasses.dataclass
+class GAConfig:
+    population_size: int = 1000
+    generations: int = 60
+    crossover_rate: float = 0.7
+    mutation_rate: float = 0.01
+    tournament_size: int = 5
+    elitism: int = 2
+    profile_based: bool = True
+    seed: int = 0
+    early_stop_patience: int = 15
+
+
+@dataclasses.dataclass
+class GAResult:
+    cuts: List[Cut]            # per client
+    latency: float
+    generations_run: int
+    convergence_gen: int       # first generation reaching the final best
+    history: List[float]
+
+
+def _fitness_factory(devices: Sequence[DeviceProfile],
+                     server: DeviceProfile, batch: int,
+                     profile_of: Optional[np.ndarray],
+                     options: List[Cut]) -> Callable[[np.ndarray], float]:
+    """individual: int array of option indices (per profile or per client)."""
+
+    def fitness(ind: np.ndarray) -> float:
+        if profile_of is not None:
+            cuts = [options[ind[profile_of[k]]] for k in range(len(profile_of))]
+        else:
+            cuts = [options[g] for g in ind]
+        return -huscf_iteration_latency(cuts, devices, server, batch)
+
+    return fitness
+
+
+def optimize_cuts(devices: Sequence[DeviceProfile],
+                  server: DeviceProfile = PAPER_SERVER, *,
+                  batch: int = 64, config: GAConfig = GAConfig()
+                  ) -> GAResult:
+    options = all_cut_options()
+    n_opt = len(options)
+    rng = np.random.default_rng(config.seed)
+
+    if config.profile_based:
+        # appendix D: collapse clients with identical profiles to one gene
+        names = [d.name for d in devices]
+        uniq = sorted(set(names))
+        profile_idx = {nm: i for i, nm in enumerate(uniq)}
+        profile_of = np.array([profile_idx[nm] for nm in names])
+        n_genes = len(uniq)
+    else:
+        profile_of = None
+        n_genes = len(devices)
+
+    fitness = _fitness_factory(devices, server, batch, profile_of, options)
+
+    pop = rng.integers(0, n_opt, size=(config.population_size, n_genes))
+    fits = np.array([fitness(ind) for ind in pop])
+    history: List[float] = []
+    best_fit = -np.inf
+    best_ind = pop[0].copy()
+    convergence_gen = 0
+    stall = 0
+    gen = 0
+
+    # memoize fitness: the gene space is small under profile reduction
+    cache: dict = {}
+
+    def cached_fitness(ind: np.ndarray) -> float:
+        key = ind.tobytes()
+        if key not in cache:
+            cache[key] = fitness(ind)
+        return cache[key]
+
+    for gen in range(1, config.generations + 1):
+        # --- selection + crossover + mutation -> next generation
+        order = np.argsort(-fits)
+        elite = pop[order[: config.elitism]].copy()
+        children = []
+        while len(children) < config.population_size - config.elitism:
+            def tournament():
+                idx = rng.integers(0, config.population_size,
+                                   config.tournament_size)
+                return pop[idx[np.argmax(fits[idx])]]
+
+            p1, p2 = tournament().copy(), tournament().copy()
+            if rng.random() < config.crossover_rate and n_genes > 1:
+                if rng.random() < 0.5:  # uniform
+                    mask = rng.random(n_genes) < 0.5
+                    p1[mask], p2[mask] = p2[mask].copy(), p1[mask].copy()
+                else:  # two-point
+                    a, b_ = sorted(rng.integers(0, n_genes, 2))
+                    p1[a:b_ + 1], p2[a:b_ + 1] = (p2[a:b_ + 1].copy(),
+                                                  p1[a:b_ + 1].copy())
+            for child in (p1, p2):
+                mut = rng.random(n_genes) < config.mutation_rate
+                child[mut] = rng.integers(0, n_opt, int(mut.sum()))
+                children.append(child)
+        pop = np.vstack([elite, np.array(children[: config.population_size
+                                                  - config.elitism])])
+        fits = np.array([cached_fitness(ind) for ind in pop])
+
+        gen_best = float(fits.max())
+        history.append(-gen_best)
+        if gen_best > best_fit + 1e-12:
+            best_fit = gen_best
+            best_ind = pop[int(np.argmax(fits))].copy()
+            convergence_gen = gen
+            stall = 0
+        else:
+            stall += 1
+            if stall >= config.early_stop_patience:
+                break
+
+    if profile_of is not None:
+        cuts = [options[best_ind[profile_of[k]]] for k in range(len(devices))]
+    else:
+        cuts = [options[g] for g in best_ind]
+    return GAResult(cuts=cuts, latency=-best_fit, generations_run=gen,
+                    convergence_gen=convergence_gen, history=history)
+
+
+def exhaustive_profile_optimum(devices: Sequence[DeviceProfile],
+                               server: DeviceProfile = PAPER_SERVER,
+                               batch: int = 64) -> Tuple[List[Cut], float]:
+    """Brute-force per-profile *independent* greedy lower bound sanity
+    check (not exact — barriers couple profiles — but a useful test
+    reference for small populations)."""
+    options = all_cut_options()
+    names = [d.name for d in devices]
+    uniq = sorted(set(names))
+    best_global = None
+    best_cuts = None
+    # coordinate descent from a sensible start
+    assign = {nm: options[0] for nm in uniq}
+    for _ in range(4):
+        for nm in uniq:
+            best_local = None
+            for opt in options:
+                trial = dict(assign); trial[nm] = opt
+                cuts = [trial[n_] for n_ in names]
+                lat = huscf_iteration_latency(cuts, devices, server, batch)
+                if best_local is None or lat < best_local[0]:
+                    best_local = (lat, opt)
+            assign[nm] = best_local[1]
+            if best_global is None or best_local[0] < best_global:
+                best_global = best_local[0]
+                best_cuts = [assign[n_] for n_ in names]
+    return best_cuts, best_global

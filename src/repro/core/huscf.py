@@ -1,0 +1,457 @@
+"""HuSCF-GAN trainer — the paper's five-stage procedure (§4.1).
+
+1. GA cut selection from device capabilities (repro.core.genetic).
+2. Heterogeneous U-shaped split learning for G and D (§4.4): client
+   heads -> server trunk (per-layer concatenation across clients whose
+   span covers the layer) -> client tails, for both networks, forward
+   and backward (backward comes free via JAX autodiff through the same
+   graph).
+3. Every E epochs: K-means on mid-layer D activations (real data).
+4. Intra-cluster KLD-weighted federation of client segments (Eq. 13-16),
+   vanilla FedAvg for the first two rounds.
+5. Evaluation hooks (generation for the metric suite).
+
+Simulation semantics: clients grouped by profile (appendix D); each
+group's client-side segments are stacked pytrees vmapped over clients.
+On a TPU mesh the stacked client axis shards over ('pod','data') and
+server segments over 'model' — see repro/launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kld as kld_mod
+from repro.core.clustering import cluster_activations
+from repro.core.federation import federate_client_params, fedavg_uniform
+from repro.core.genetic import GAConfig, optimize_cuts
+from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
+from repro.core.splitting import (ProfileGroup, group_by_profile, layer_pair,
+                                  server_union_span)
+from repro.data.partition import ClientSpec
+from repro.sharding.policy import maybe_shard
+from repro.models import gan
+from repro.models.gan import (DISC_LAYER_DEFS, DISC_MIDDLE, GEN_LAYER_DEFS,
+                              Z_DIM, d_loss_fn, g_loss_fn)
+from repro.optim import adam
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass
+class HuSCFConfig:
+    batch: int = 32
+    federate_every: int = 5          # E
+    beta: float = 150.0              # KLD weight scale
+    lr: float = 2e-4
+    adam_b1: float = 0.5
+    num_clusters: Optional[int] = None   # None -> silhouette selection
+    seed: int = 0
+    use_kernel: bool = False         # Pallas weighted_agg for aggregation
+    steps_per_epoch: Optional[int] = None
+    warmup_fed_rounds: int = 2       # vanilla FedAvg rounds (paper §4.5)
+
+
+# ---------------------------------------------------------------------------
+# functional forward passes over the split topology
+# ---------------------------------------------------------------------------
+
+def _head_pass(defs, params: Dict[str, Any], x, stop: int, train: bool):
+    new = {}
+    for l in range(stop):
+        x, new[str(l)] = defs[l][1](params[str(l)], x, train)
+    return x, new
+
+
+def _tail_pass(defs, params: Dict[str, Any], x, start: int, n: int, train: bool):
+    new = {}
+    for l in range(start, n):
+        x, new[str(l)] = defs[l][1](params[str(l)], x, train)
+    return x, new
+
+
+def build_net_apply(groups: Sequence[ProfileGroup], net: str,
+                    capture_middle: bool = False,
+                    concat_groups: bool = True):
+    """Returns apply(client_params, server_params, inputs, train) ->
+    (outputs {gname: [K,b,...]}, new_client, new_server, middles).
+
+    inputs: {gname: tuple of per-client-stacked arrays fed to layer 0}.
+
+    concat_groups=True is the paper-faithful schedule (the server
+    concatenates all clients' activations per layer, so BatchNorm stats
+    span the whole population). False is the beyond-paper TPU
+    optimization (EXPERIMENTS.md §Perf iteration 5): each profile group
+    flows through the shared server weights separately, which keeps the
+    client-sharded layout intact (no realignment all-gathers) at the
+    cost of ghost-BatchNorm (per-group) statistics.
+    """
+    defs = GEN_LAYER_DEFS if net == "G" else DISC_LAYER_DEFS
+    n = len(defs)
+    middle = n // 2
+    span = server_union_span(groups, net, n)
+
+    def apply(client_params, server_params, inputs, train: bool):
+        new_client = {g.name: dict(client_params[g.name]) for g in groups}
+        new_server = dict(server_params)
+        # --- heads (vmapped over clients)
+        bufs: Dict[str, Array] = {}
+        shapes: Dict[str, Tuple[int, int]] = {}
+        for g in groups:
+            h, _ = layer_pair(g.cut, net)
+            head_fn = functools.partial(_head_pass, defs, stop=h, train=train)
+            acts, upd = jax.vmap(lambda p, *xs: head_fn(p, xs))(
+                client_params[g.name], *inputs[g.name])
+            new_client[g.name].update(upd)
+            k, b = acts.shape[0], acts.shape[1]
+            shapes[g.name] = (k, b)
+            bufs[g.name] = maybe_shard(
+                acts.reshape((k * b,) + acts.shape[2:]), "rows")
+        # --- server trunk with per-layer join/leave (paper Fig. 7)
+        outs: Dict[str, Array] = {}
+        middles: Dict[str, Array] = {}
+        for l in span:
+            active = [g for g in groups
+                      if layer_pair(g.cut, net)[0] <= l < layer_pair(g.cut, net)[1]]
+            if concat_groups:
+                xs = [bufs[g.name] for g in active]
+                sizes = [x.shape[0] for x in xs]
+                x = jnp.concatenate(xs, 0) if len(xs) > 1 else xs[0]
+                x, new_server[str(l)] = defs[l][1](server_params[str(l)], x,
+                                                   train)
+                parts = (jnp.split(x, list(np.cumsum(sizes)[:-1]), 0)
+                         if len(xs) > 1 else [x])
+            else:
+                # per-group pass through the SAME shared server weights;
+                # BN state updates merge by equal-weight averaging.
+                parts, bn_updates = [], []
+                for g in active:
+                    y, upd = defs[l][1](server_params[str(l)],
+                                        bufs[g.name], train)
+                    parts.append(y)
+                    bn_updates.append(upd)
+                new_server[str(l)] = jax.tree_util.tree_map(
+                    lambda *xs: sum(xs) / len(xs), *bn_updates)
+            for g, part in zip(active, parts):
+                bufs[g.name] = maybe_shard(part, "rows")
+                if capture_middle and l == middle:
+                    k, b = shapes[g.name]
+                    mid = part.reshape((k, b) + part.shape[1:])
+                    middles[g.name] = jnp.mean(
+                        mid.reshape(k, b, -1).astype(jnp.float32), axis=1)
+                if layer_pair(g.cut, net)[1] == l + 1:
+                    outs[g.name] = bufs[g.name]
+        # --- tails (vmapped)
+        results: Dict[str, Array] = {}
+        for g in groups:
+            _, t = layer_pair(g.cut, net)
+            k, b = shapes[g.name]
+            x = outs[g.name]
+            x = x.reshape((k, b) + x.shape[1:])
+            tail_fn = functools.partial(_tail_pass, defs, start=t, n=n,
+                                        train=train)
+            y, upd = jax.vmap(tail_fn)(client_params[g.name], x)
+            new_client[g.name].update(upd)
+            results[g.name] = y
+        return results, new_client, new_server, middles
+
+    return apply
+
+
+# ---------------------------------------------------------------------------
+# trainer
+# ---------------------------------------------------------------------------
+
+class HuSCFTrainer:
+    """End-to-end HuSCF-GAN over a client population."""
+
+    def __init__(self, clients: Sequence[ClientSpec],
+                 devices: Optional[Sequence[DeviceProfile]] = None,
+                 cuts: Optional[Sequence[Cut]] = None,
+                 config: HuSCFConfig = HuSCFConfig(),
+                 server: DeviceProfile = PAPER_SERVER,
+                 ga_config: Optional[GAConfig] = None):
+        self.clients = list(clients)
+        self.cfg = config
+        K = len(self.clients)
+        if devices is None:
+            devices = [PAPER_DEVICES[i % len(PAPER_DEVICES)] for i in range(K)]
+        self.devices = list(devices)
+        self.server_profile = server
+
+        # Stage 1: GA cut selection
+        if cuts is None:
+            ga_config = ga_config or GAConfig(population_size=200,
+                                              generations=30, seed=config.seed)
+            result = optimize_cuts(self.devices, server, batch=config.batch,
+                                   config=ga_config)
+            cuts = result.cuts
+            self.ga_latency = result.latency
+        else:
+            self.ga_latency = huscf_iteration_latency(cuts, self.devices,
+                                                      server, config.batch)
+        self.cuts = list(cuts)
+        self.groups = group_by_profile(self.devices, self.cuts)
+        self.sizes = np.array([c.n for c in self.clients], np.int64)
+
+        key = jax.random.PRNGKey(config.seed)
+        self.state = self._init_state(key)
+        self._rng = np.random.default_rng(config.seed + 1)
+        self._step_fn = self._build_step()
+        self._gen_fn = None
+        self.fed_round = 0
+        self.epoch = 0
+        self._mid_acc: Dict[int, np.ndarray] = {}
+        self.history: List[Dict[str, float]] = []
+
+    # -- initialization ----------------------------------------------------
+    def _init_state(self, key) -> Dict[str, Any]:
+        kg, kd, kc = jax.random.split(key, 3)
+        n_g, n_d = len(GEN_LAYER_DEFS), len(DISC_LAYER_DEFS)
+        # server holds the union span of every layer any client delegates
+        server_g = {}
+        for l in server_union_span(self.groups, "G", n_g):
+            kg, sub = jax.random.split(kg)
+            server_g[str(l)] = GEN_LAYER_DEFS[l][0](sub, jnp.float32)
+        server_d = {}
+        for l in server_union_span(self.groups, "D", n_d):
+            kd, sub = jax.random.split(kd)
+            server_d[str(l)] = DISC_LAYER_DEFS[l][0](sub, jnp.float32)
+
+        client_g, client_d = {}, {}
+        for g in self.groups:
+            kc, k1, k2 = jax.random.split(kc, 3)
+            gh, gt = g.cut.g_h, g.cut.g_t
+            dh, dt = g.cut.d_h, g.cut.d_t
+            keys_g = jax.random.split(k1, g.size)
+            client_g[g.name] = {
+                str(l): jax.vmap(lambda kk, l=l: GEN_LAYER_DEFS[l][0](kk, jnp.float32))(keys_g)
+                for l in list(range(gh)) + list(range(gt, n_g))}
+            keys_d = jax.random.split(k2, g.size)
+            client_d[g.name] = {
+                str(l): jax.vmap(lambda kk, l=l: DISC_LAYER_DEFS[l][0](kk, jnp.float32))(keys_d)
+                for l in list(range(dh)) + list(range(dt, n_d))}
+
+        g_params = {"client": client_g, "server": server_g}
+        d_params = {"client": client_d, "server": server_d}
+        opt_init_g, self._opt_update_g = adam(self.cfg.lr, b1=self.cfg.adam_b1)
+        opt_init_d, self._opt_update_d = adam(self.cfg.lr, b1=self.cfg.adam_b1)
+        return {"G": g_params, "D": d_params,
+                "opt_g": opt_init_g(g_params), "opt_d": opt_init_d(d_params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # -- one training step (jitted) ----------------------------------------
+    def _build_step(self) -> Callable:
+        gen_apply = build_net_apply(self.groups, "G")
+        disc_apply = build_net_apply(self.groups, "D", capture_middle=True)
+        groups = self.groups
+        total_clients = sum(g.size for g in groups)
+        opt_update_g, opt_update_d = self._opt_update_g, self._opt_update_d
+
+        def mean_client_loss(logits: Dict[str, Array], target: float) -> Array:
+            tot = 0.0
+            for g in groups:
+                per = gan.bce_logits(logits[g.name].reshape(-1), target)
+                tot = tot + per * g.size
+            return tot / total_clients
+
+        def step(state, batch):
+            g_params, d_params = state["G"], state["D"]
+
+            # ---------------- discriminator update
+            def d_loss(d_p):
+                fake, _, _, _ = gen_apply(g_params["client"],
+                                          g_params["server"],
+                                          {g.name: (batch["z"][g.name],
+                                                    batch["fake_y"][g.name])
+                                           for g in groups}, True)
+                fake = {k: jax.lax.stop_gradient(v) for k, v in fake.items()}
+                lr_, ncr, nsr, mids = disc_apply(
+                    d_p["client"], d_p["server"],
+                    {g.name: (batch["real_img"][g.name],
+                              batch["real_y"][g.name]) for g in groups}, True)
+                lf_, _, _, _ = disc_apply(
+                    d_p["client"], d_p["server"],
+                    {g.name: (fake[g.name], batch["fake_y"][g.name])
+                     for g in groups}, True)
+                loss = (mean_client_loss(lr_, 1.0)
+                        + mean_client_loss(lf_, 0.0))
+                return loss, ({"client": ncr, "server": nsr}, mids)
+
+            (loss_d, (d_bn, mids)), grads_d = jax.value_and_grad(
+                d_loss, has_aux=True)(d_params)
+            new_opt_d, d_new = opt_update_d(state["opt_d"], grads_d, d_params)
+            # keep BatchNorm running stats from the real-data pass
+            d_new = _merge_bn(d_new, d_bn)
+
+            # ---------------- generator update (vs updated D)
+            def g_loss(g_p):
+                fake, ncg, nsg, _ = gen_apply(g_p["client"], g_p["server"],
+                                              {g.name: (batch["z"][g.name],
+                                                        batch["fake_y"][g.name])
+                                               for g in groups}, True)
+                logits, _, _, _ = disc_apply(
+                    d_new["client"], d_new["server"],
+                    {g.name: (fake[g.name], batch["fake_y"][g.name])
+                     for g in groups}, True)
+                loss = mean_client_loss(logits, 1.0)
+                return loss, {"client": ncg, "server": nsg}
+
+            (loss_g, g_bn), grads_g = jax.value_and_grad(
+                g_loss, has_aux=True)(g_params)
+            new_opt_g, g_new = opt_update_g(state["opt_g"], grads_g, g_params)
+            g_new = _merge_bn(g_new, g_bn)
+
+            new_state = {"G": g_new, "D": d_new, "opt_g": new_opt_g,
+                         "opt_d": new_opt_d, "step": state["step"] + 1}
+            metrics = {"loss_d": loss_d, "loss_g": loss_g}
+            return new_state, metrics, mids
+
+        return jax.jit(step)
+
+    # -- host-side data assembly -------------------------------------------
+    def _sample_batch(self) -> Dict[str, Dict[str, np.ndarray]]:
+        b = self.cfg.batch
+        batch = {"real_img": {}, "real_y": {}, "z": {}, "fake_y": {}}
+        for g in self.groups:
+            imgs, ys = [], []
+            for cid in g.client_ids:
+                spec = self.clients[cid]
+                idx = self._rng.integers(0, spec.n, b)
+                imgs.append(spec.images[idx])
+                ys.append(spec.labels[idx])
+            batch["real_img"][g.name] = np.stack(imgs)
+            batch["real_y"][g.name] = np.stack(ys)
+            batch["z"][g.name] = self._rng.normal(
+                0, 1, (g.size, b, Z_DIM)).astype(np.float32)
+            batch["fake_y"][g.name] = self._rng.integers(
+                0, gan.NUM_CLASSES, (g.size, b)).astype(np.int32)
+        return batch
+
+    # -- public API ----------------------------------------------------------
+    def train_steps(self, n_steps: int) -> Dict[str, float]:
+        last = {}
+        for _ in range(n_steps):
+            batch = self._sample_batch()
+            self.state, metrics, mids = self._step_fn(self.state, batch)
+            for g in self.groups:
+                m = np.asarray(mids[g.name])
+                for pos, cid in enumerate(g.client_ids):
+                    prev = self._mid_acc.get(cid)
+                    self._mid_acc[cid] = (m[pos] if prev is None
+                                          else 0.8 * prev + 0.2 * m[pos])
+            last = {k: float(v) for k, v in metrics.items()}
+        return last
+
+    def train_epoch(self) -> Dict[str, float]:
+        steps = self.cfg.steps_per_epoch or max(
+            1, int(np.median(self.sizes)) // self.cfg.batch)
+        metrics = self.train_steps(steps)
+        self.epoch += 1
+        if self.epoch % self.cfg.federate_every == 0:
+            self.federate()
+        self.history.append(metrics)
+        return metrics
+
+    def middle_activations(self) -> np.ndarray:
+        K = len(self.clients)
+        feat = next(iter(self._mid_acc.values()))
+        out = np.zeros((K,) + feat.shape, np.float32)
+        for cid, v in self._mid_acc.items():
+            out[cid] = v
+        return out
+
+    def federate(self, use_label_kld: bool = False) -> Dict[str, Any]:
+        """Stages 3+4. Returns diagnostics."""
+        self.fed_round += 1
+        if self.fed_round <= self.cfg.warmup_fed_rounds:
+            for net in ("G", "D"):
+                wrapped = {g.name: {net: self.state[net]["client"][g.name]}
+                           for g in self.groups}
+                out = fedavg_uniform(self.groups, wrapped, self.sizes,
+                                     n_layers={net: 5})
+                self.state[net]["client"] = {g.name: out[g.name][net]
+                                             for g in self.groups}
+            return {"round": self.fed_round, "mode": "fedavg"}
+
+        acts = self.middle_activations()
+        cl = cluster_activations(acts, k=self.cfg.num_clusters,
+                                 seed=self.cfg.seed)
+        if use_label_kld:
+            hists = np.stack([np.bincount(c.labels, minlength=gan.NUM_CLASSES)
+                              for c in self.clients])
+            weights, klds = kld_mod.label_weights(hists, self.sizes,
+                                                  cl.labels, self.cfg.beta)
+        else:
+            weights, klds = kld_mod.activation_weights(acts, self.sizes,
+                                                       cl.labels, self.cfg.beta)
+        for net in ("G", "D"):
+            wrapped = {g.name: {net: self.state[net]["client"][g.name]}
+                       for g in self.groups}
+            out = federate_client_params(self.groups, wrapped, weights,
+                                         cl.labels, n_layers={net: 5},
+                                         use_kernel=self.cfg.use_kernel)
+            self.state[net]["client"] = {g.name: out[g.name][net]
+                                         for g in self.groups}
+        return {"round": self.fed_round, "mode": "clustered",
+                "k": cl.k, "silhouette": cl.silhouette,
+                "labels": cl.labels, "weights": weights, "klds": klds}
+
+    # -- generation for evaluation ------------------------------------------
+    def generate(self, n_per_client_batch: int, labels: np.ndarray
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+        """Generate len(labels) images by cycling clients. labels [N]."""
+        if self._gen_fn is None:
+            gen_apply = build_net_apply(self.groups, "G")
+
+            def gen(state, z, y):
+                out, _, _, _ = gen_apply(state["G"]["client"],
+                                         state["G"]["server"], {
+                    g.name: (z[g.name], y[g.name]) for g in self.groups},
+                    False)
+                return out
+            self._gen_fn = jax.jit(gen)
+        imgs_all, labels_all = [], []
+        i = 0
+        while i < len(labels):
+            z, y = {}, {}
+            take = {}
+            for g in self.groups:
+                need = min(n_per_client_batch, max(1, (len(labels) - i)
+                                                   // max(1, g.size)))
+                lab = np.resize(labels[i:], (g.size, need)).astype(np.int32)
+                z[g.name] = self._rng.normal(0, 1, (g.size, need, Z_DIM)
+                                             ).astype(np.float32)
+                y[g.name] = lab
+                take[g.name] = lab
+            out = self._gen_fn(self.state, z, y)
+            for g in self.groups:
+                arr = np.asarray(out[g.name]).reshape(-1, 28, 28, 1)
+                imgs_all.append(arr)
+                labels_all.append(take[g.name].reshape(-1))
+                i += arr.shape[0]
+        imgs = np.concatenate(imgs_all)[: len(labels)]
+        labs = np.concatenate(labels_all)[: len(labels)]
+        return imgs, labs
+
+
+def _merge_bn(updated_params, bn_params):
+    """Take optimizer-updated learnables but BatchNorm running stats
+    (keys 'mean'/'var') from the forward pass."""
+    flat_u = jax.tree_util.tree_flatten_with_path(updated_params)[0]
+    flat_b = {jax.tree_util.keystr(p): v for p, v in
+              jax.tree_util.tree_flatten_with_path(bn_params)[0]}
+    out = []
+    for path, val in flat_u:
+        ks = jax.tree_util.keystr(path)
+        if ks.endswith("['mean']") or ks.endswith("['var']"):
+            out.append(flat_b.get(ks, val))
+        else:
+            out.append(val)
+    treedef = jax.tree_util.tree_structure(updated_params)
+    return jax.tree_util.tree_unflatten(treedef, out)

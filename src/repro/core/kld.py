@@ -1,0 +1,89 @@
+"""Activation-based KLD scoring — paper §4.5, Eq. (13)-(15).
+
+P_k   = softmax(mean middle-layer discriminator activation of client k)
+P_j,k = leave-one-out mean of P over client k's cluster
+KLD_k = KL(P_k || P_j,k)
+s_k   = n_k exp(-beta KLD_k) / sum_{j in cluster} n_j exp(-beta KLD_j)
+
+Also provides the label-distribution-based variant (FeGAN-style,
+paper §6.3 comparison) which shares the same weighting equation but
+feeds label histograms instead of activations.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+def softmax_np(x: np.ndarray, axis: int = -1) -> np.ndarray:
+    x = x - x.max(axis=axis, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def kl_divergence(p: np.ndarray, q: np.ndarray, eps: float = 1e-12) -> float:
+    """Eq. (2)."""
+    p = np.clip(p, eps, None)
+    q = np.clip(q, eps, None)
+    return float(np.sum(p * np.log(p / q)))
+
+
+def activation_distributions(acts: np.ndarray) -> np.ndarray:
+    """Eq. (13): P_k = softmax(alpha_k)."""
+    return softmax_np(acts.astype(np.float64), axis=-1)
+
+
+def cluster_klds(P: np.ndarray, labels: np.ndarray) -> np.ndarray:
+    """Eq. (14) leave-one-out cluster mean + Eq. (2) KLD per client."""
+    K = P.shape[0]
+    klds = np.zeros(K)
+    for k in range(K):
+        same = np.flatnonzero(labels == labels[k])
+        others = same[same != k]
+        if others.size == 0:
+            klds[k] = 0.0
+            continue
+        P_j = P[others].sum(0) / others.size
+        klds[k] = kl_divergence(P[k], P_j)
+    return klds
+
+
+def federation_weights(klds: np.ndarray, sizes: np.ndarray,
+                       labels: np.ndarray, beta: float = 150.0) -> np.ndarray:
+    """Eq. (15): within-cluster normalized s_k. Returns [K] weights that
+    sum to 1 *within each cluster*."""
+    raw = sizes.astype(np.float64) * np.exp(-beta * klds)
+    out = np.zeros_like(raw)
+    for c in np.unique(labels):
+        mask = labels == c
+        denom = raw[mask].sum()
+        out[mask] = raw[mask] / denom if denom > 0 else 1.0 / mask.sum()
+    return out
+
+
+def global_weights(klds: np.ndarray, sizes: np.ndarray,
+                   beta: float = 150.0) -> np.ndarray:
+    """Eq. (15) applied globally (server-side segments, paper §4.5 end)."""
+    raw = sizes.astype(np.float64) * np.exp(-beta * klds)
+    return raw / raw.sum()
+
+
+def activation_weights(acts: np.ndarray, sizes: np.ndarray,
+                       labels: np.ndarray, beta: float = 150.0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """End-to-end Eq. 13-15: returns (intra-cluster weights, klds)."""
+    P = activation_distributions(acts)
+    klds = cluster_klds(P, labels)
+    return federation_weights(klds, sizes, labels, beta), klds
+
+
+def label_weights(label_hists: np.ndarray, sizes: np.ndarray,
+                  labels: np.ndarray, beta: float = 150.0
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """FeGAN-style label-distribution KLD (privacy-leaking baseline,
+    paper §6.3). label_hists: [K, num_classes] counts."""
+    P = label_hists.astype(np.float64)
+    P = P / np.clip(P.sum(-1, keepdims=True), 1e-12, None)
+    klds = cluster_klds(P, labels)
+    return federation_weights(klds, sizes, labels, beta), klds

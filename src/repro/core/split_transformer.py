@@ -1,0 +1,240 @@
+"""HuSCF applied to single-network transformers (paper §7.3).
+
+Two cuts per client (head / server-trunk / tail): the embedding plus the
+first `cut_head` blocks and the last blocks plus the LM head stay on the
+client (so raw tokens and predictions never leave it); the middle trunk
+is shared on the server. Clients grouped by device profile exactly as in
+the GAN trainer; client segments are stacked pytrees vmapped over the
+population and sharded along the mesh data axis; the server trunk runs
+under lax.scan with tensor parallelism.
+
+This is the paper-technique dry-run subject for LM architectures: one
+jitted `huscf_lm_train_step` with the same five-stage semantics (split
+forward, autodiff backward, cluster+KLD federation over client copies).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import nn
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.sharding.policy import maybe_shard
+
+
+@dataclasses.dataclass(frozen=True)
+class LMProfileGroup:
+    """Clients sharing a device profile: same (cut_head, cut_tail)."""
+    name: str
+    n_clients: int
+    cut_head: int   # blocks on the client before the server trunk
+    cut_tail: int   # blocks on the client after the server trunk
+
+
+def default_groups(cfg: ArchConfig, n_weak: int = 2, n_strong: int = 2
+                   ) -> List[LMProfileGroup]:
+    """A representative heterogeneous population: weak devices hold one
+    super-block head/tail, strong ones hold two."""
+    pat = len(cfg.block_pattern)
+    return [
+        LMProfileGroup("weak", n_weak, pat, pat),
+        LMProfileGroup("strong", n_strong, 2 * pat, 2 * pat),
+    ]
+
+
+def init_split_lm(key, cfg: ArchConfig, groups: Sequence[LMProfileGroup]
+                  ) -> Dict[str, Any]:
+    """Client stacks own embed + head/tail blocks + final norm; server
+    owns the trunk (max span) shared by all."""
+    pat = cfg.block_pattern
+    n_pat = len(pat)
+    max_head = max(g.cut_head for g in groups)
+    max_tail = max(g.cut_tail for g in groups)
+    trunk_layers = cfg.n_layers - max_head - max_tail
+    n_super = trunk_layers // n_pat
+    assert n_super >= 1, "trunk must keep at least one super-block"
+
+    k_server, k_clients = jax.random.split(key)
+    server = {"blocks": {
+        f"p{j}_{kind}": jax.vmap(
+            lambda kk: T.init_block(kk, cfg, kind))(
+                jax.random.split(jax.random.fold_in(k_server, j), n_super))
+        for j, kind in enumerate(pat)}}
+
+    clients = {}
+    for gi, g in enumerate(groups):
+        kg = jax.random.fold_in(k_clients, gi)
+
+        def one_client(kk):
+            ks = jax.random.split(kk, 4)
+            head = {f"h{i}_{pat[i % n_pat]}":
+                    T.init_block(jax.random.fold_in(ks[0], i), cfg,
+                                 pat[i % n_pat])
+                    for i in range(g.cut_head)}
+            tail = {f"t{i}_{pat[i % n_pat]}":
+                    T.init_block(jax.random.fold_in(ks[1], i), cfg,
+                                 pat[i % n_pat])
+                    for i in range(g.cut_tail)}
+            return {"embed": nn.embedding_init(ks[2], cfg.vocab, cfg.d_model,
+                                               dtype=cfg.dtype),
+                    "head": head, "tail": tail,
+                    "final_norm": (nn.layernorm_init(cfg.d_model, cfg.dtype)
+                                   if cfg.norm == "layernorm" else
+                                   nn.rmsnorm_init(cfg.d_model, cfg.dtype))}
+
+        clients[g.name] = jax.vmap(one_client)(
+            jax.random.split(kg, g.n_clients))
+    return {"server": server, "clients": clients}
+
+
+def split_lm_forward(cfg: ArchConfig, params: Dict[str, Any],
+                     groups: Sequence[LMProfileGroup],
+                     tokens: Dict[str, jnp.ndarray], *, unroll: int = 1
+                     ) -> Dict[str, jnp.ndarray]:
+    """tokens: {group: [K_g, b, S]} -> logits {group: [K_g, b, S, V]}."""
+    pat = cfg.block_pattern
+    n_pat = len(pat)
+    scale = jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    S = next(iter(tokens.values())).shape[-1]
+    positions = jnp.arange(S)
+
+    # --- client heads (vmapped over the stacked client axis)
+    acts = {}
+    for g in groups:
+        def head_fn(cp, toks):
+            x = nn.embedding_apply(cp["embed"], toks).astype(cfg.dtype) * scale
+            for i in range(g.cut_head):
+                kind = pat[i % n_pat]
+                x, _ = T.block_seq(cfg, kind, cp["head"][f"h{i}_{kind}"], x,
+                                   positions)
+            return x
+        acts[g.name] = jax.vmap(head_fn)(params["clients"][g.name],
+                                         tokens[g.name])
+
+    # --- server trunk over the concatenated population batch
+    sizes = [acts[g.name].shape[0] * acts[g.name].shape[1] for g in groups]
+    flat = [acts[g.name].reshape((-1, S, cfg.d_model)) for g in groups]
+    x = jnp.concatenate(flat, 0) if len(flat) > 1 else flat[0]
+    x = maybe_shard(x, "resid")
+
+    def body(x, slice_p):
+        for j, kind in enumerate(pat):
+            x, _ = T.block_seq(cfg, kind, slice_p[f"p{j}_{kind}"], x,
+                               positions)
+        return x, None
+
+    x, _ = lax.scan(lambda c, p: (jax.checkpoint(
+        lambda cc, pp: body(cc, pp)[0])(c, p), None),
+        x, params["server"]["blocks"], unroll=unroll)
+
+    # --- client tails
+    import numpy as _np
+    parts = jnp.split(x, list(_np.cumsum(sizes)[:-1]), 0) \
+        if len(sizes) > 1 else [x]
+    out = {}
+    for g, part in zip(groups, parts):
+        part = part.reshape((g.n_clients, -1, S, cfg.d_model))
+
+        def tail_fn(cp, x):
+            for i in range(g.cut_tail):
+                kind = pat[i % n_pat]
+                x, _ = T.block_seq(cfg, kind, cp["tail"][f"t{i}_{kind}"], x,
+                                   positions)
+            x = (nn.layernorm_apply(cp["final_norm"], x)
+                 if cfg.norm == "layernorm"
+                 else nn.rmsnorm_apply(cp["final_norm"], x))
+            return nn.embedding_attend(cp["embed"], x)
+        out[g.name] = jax.vmap(tail_fn)(params["clients"][g.name], part)
+    return out
+
+
+def make_split_train_step(cfg: ArchConfig,
+                          groups: Sequence[LMProfileGroup],
+                          lr: float = 1e-4, unroll: int = 1):
+    """Returns (train_step, opt_init) over the split-population state."""
+    opt_init, opt_update = adam(lr, grad_clip=1.0)
+
+    def loss_fn(params, batch):
+        logits = split_lm_forward(cfg, params, groups, batch["tokens"],
+                                  unroll=unroll)
+        total, count = 0.0, 0
+        for g in groups:
+            lg = logits[g.name]
+            logp = jax.nn.log_softmax(lg.astype(jnp.float32), -1)
+            nll = -jnp.take_along_axis(
+                logp, batch["labels"][g.name][..., None], -1)[..., 0]
+            total = total + nll.mean() * g.n_clients
+            count += g.n_clients
+        return total / count
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        opt_state, params = opt_update(opt_state, grads, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step, opt_init
+
+
+def federate_split_lm(params: Dict[str, Any],
+                      groups: Sequence[LMProfileGroup],
+                      weights: "np.ndarray", labels: "np.ndarray"):
+    """Clustered KLD-weighted federation of the client segments: the
+    embedding + final norm (owned by every client) aggregate cluster-wise;
+    head/tail blocks aggregate over the clients of the same profile in
+    the same cluster (layer-wise ownership, as in the GAN trainer)."""
+    import numpy as np
+    new_clients = {}
+    offset = 0
+    offsets = {}
+    for g in groups:
+        offsets[g.name] = offset
+        offset += g.n_clients
+    # embedding/final_norm: owned by all -> cluster-wise global aggregation
+    for g in groups:
+        new_clients[g.name] = dict(params["clients"][g.name])
+    for c in np.unique(labels):
+        members = []  # (group, pos, weight)
+        for g in groups:
+            for pos in range(g.n_clients):
+                cid = offsets[g.name] + pos
+                if labels[cid] == c:
+                    members.append((g, pos, weights[cid]))
+        w = np.array([m[2] for m in members], np.float64)
+        w = w / w.sum() if w.sum() > 0 else np.full(len(members),
+                                                    1 / len(members))
+        for key in ("embed", "final_norm"):
+            copies = [jax.tree_util.tree_map(
+                lambda x: x[pos], params["clients"][g.name][key])
+                for g, pos, _ in members]
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                             *copies)
+            agg = nn.tree_weighted_sum(stacked, jnp.asarray(w))
+            for (g, pos, _) in members:
+                new_clients[g.name][key] = jax.tree_util.tree_map(
+                    lambda full, a: full.at[pos].set(a.astype(full.dtype)),
+                    new_clients[g.name][key], agg)
+        # head/tail blocks: aggregate within (profile, cluster)
+        for g in groups:
+            sel = [pos for gg, pos, _ in members if gg is g]
+            if len(sel) < 2:
+                continue
+            wsel = np.array([weights[offsets[g.name] + p] for p in sel])
+            wsel = wsel / wsel.sum()
+            for key in ("head", "tail"):
+                sub = jax.tree_util.tree_map(
+                    lambda x: x[np.array(sel)], params["clients"][g.name][key])
+                agg = nn.tree_weighted_sum(sub, jnp.asarray(wsel))
+                new_clients[g.name][key] = jax.tree_util.tree_map(
+                    lambda full, a: full.at[np.array(sel)].set(
+                        jnp.broadcast_to(a, (len(sel),) + a.shape
+                                         ).astype(full.dtype)),
+                    new_clients[g.name][key], agg)
+    return {"server": params["server"], "clients": new_clients}

@@ -1,0 +1,80 @@
+"""Cut/segment machinery for layered models — paper §4.1/§4.4.
+
+A *layered model* is an ordered list of (init, apply) layer pairs (see
+`repro.models.gan`). A `Cut` splits each network into head/server/tail.
+Clients are grouped into `ProfileGroup`s (appendix D): all clients in a
+group share a device profile and therefore a cut, so their client-side
+segments stack into leading-axis-K_p pytrees that we vmap over.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.latency import Cut, DeviceProfile
+
+
+@dataclasses.dataclass
+class ProfileGroup:
+    """A set of clients sharing one device profile and one cut."""
+    name: str
+    profile: DeviceProfile
+    cut: Cut
+    client_ids: List[int]          # global client indices, canonical order
+
+    @property
+    def size(self) -> int:
+        return len(self.client_ids)
+
+
+def group_by_profile(devices: Sequence[DeviceProfile],
+                     cuts: Sequence[Cut]) -> List[ProfileGroup]:
+    """Group clients whose (profile, cut) coincide. Client order inside a
+    group follows global order; groups sorted by name for determinism."""
+    table: Dict[Tuple, ProfileGroup] = {}
+    for cid, (dev, cut) in enumerate(zip(devices, cuts)):
+        key = (dev.name, cut.as_tuple())
+        if key not in table:
+            table[key] = ProfileGroup(f"{dev.name}|{cut.as_tuple()}", dev, cut, [])
+        table[key].client_ids.append(cid)
+    return [table[k] for k in sorted(table.keys(), key=str)]
+
+
+def head_layers(cut_pair: Tuple[int, int]) -> range:
+    return range(0, cut_pair[0])
+
+
+def server_layers(cut_pair: Tuple[int, int]) -> range:
+    return range(cut_pair[0], cut_pair[1])
+
+
+def tail_layers(cut_pair: Tuple[int, int], n_layers: int) -> range:
+    return range(cut_pair[1], n_layers)
+
+
+def client_owned_layers(cut_pair: Tuple[int, int], n_layers: int) -> List[int]:
+    return list(head_layers(cut_pair)) + list(tail_layers(cut_pair, n_layers))
+
+
+def server_union_span(groups: Sequence[ProfileGroup], net: str,
+                      n_layers: int) -> List[int]:
+    """All layer indices any client delegates to the server for net G|D."""
+    owned = set()
+    for g in groups:
+        pair = (g.cut.g_h, g.cut.g_t) if net == "G" else (g.cut.d_h, g.cut.d_t)
+        owned |= set(server_layers(pair))
+    return sorted(owned)
+
+
+def stack_params(init_fn, key, k: int, dtype=jnp.float32):
+    """Initialize k independent copies of a layer, stacked on axis 0."""
+    keys = jax.random.split(key, k)
+    return jax.vmap(lambda kk: init_fn(kk, dtype))(keys)
+
+
+def layer_pair(cut: Cut, net: str) -> Tuple[int, int]:
+    return (cut.g_h, cut.g_t) if net == "G" else (cut.d_h, cut.d_t)

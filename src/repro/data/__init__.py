@@ -1,0 +1,7 @@
+from repro.data.synthetic import DOMAINS, NUM_CLASSES, make_dataset, make_class_balanced
+from repro.data.partition import ClientSpec, build_scenario, partition_domain, batches
+from repro.data.tokens import lm_batches
+
+__all__ = ["DOMAINS", "NUM_CLASSES", "make_dataset", "make_class_balanced",
+           "ClientSpec", "build_scenario", "partition_domain", "batches",
+           "lm_batches"]

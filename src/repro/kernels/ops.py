@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as traced jnp on the host); on TPU set REPRO_PALLAS_COMPILE=1
+to lower them for real. All wrappers are shape-polymorphic at the JAX
+level and validated against repro.kernels.ref oracles in
+tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_decode as _fd
+from repro.kernels import kmeans_assign as _km
+from repro.kernels import weighted_agg as _wa
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def weighted_agg(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """out = sum_k w[k] * stacked[k, ...] (any trailing shape)."""
+    K = stacked.shape[0]
+    flat = stacked.reshape(K, -1)
+    out = _wa.weighted_agg_flat(flat, weights, interpret=INTERPRET)
+    return out.reshape(stacked.shape[1:])
+
+
+@jax.jit
+def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    return _km.kmeans_assign(x, centers, interpret=INTERPRET)
+
+
+@jax.jit
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 cache_len: jnp.ndarray) -> jnp.ndarray:
+    return _fd.flash_decode(q, k, v, cache_len, interpret=INTERPRET)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """KLD-weighted federated aggregation: out = sum_k w[k] * x[k, ...].
+
+    stacked [K, ...] any float dtype; weights [K] (already normalized).
+    Accumulates in f32, returns stacked.dtype.
+    """
+    w = weights.astype(jnp.float32)
+    flat = stacked.reshape(stacked.shape[0], -1).astype(jnp.float32)
+    out = jnp.einsum("k,kd->d", w, flat)
+    return out.reshape(stacked.shape[1:]).astype(stacked.dtype)
+
+
+def kmeans_assign_ref(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-center assignment: x [N, D], centers [M, D] -> labels [N]."""
+    d2 = (jnp.sum(x.astype(jnp.float32) ** 2, -1)[:, None]
+          - 2.0 * x.astype(jnp.float32) @ centers.astype(jnp.float32).T
+          + jnp.sum(centers.astype(jnp.float32) ** 2, -1)[None, :])
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     cache_len: jnp.ndarray) -> jnp.ndarray:
+    """Single-token GQA decode attention.
+
+    q [B, H, hd]; k/v [B, S, KV, hd]; cache_len scalar int32.
+    Returns [B, H, hd] (f32 accumulated, cast to q.dtype).
+    """
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh,
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < cache_len
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: KLD-weighted federated parameter aggregation.
+
+out[d] = sum_k w[k] * theta[k, d] over a flat parameter vector — the
+server-side hot spot of every federation round (Eq. 16): ~3M params x
+K clients per GAN round, or gigabytes for the split-transformer mode.
+
+TPU mapping: the flat parameter axis is tiled into (8, 1024)-shaped VMEM
+blocks (sublane x lane aligned); the client axis K stays resident per
+block so each block is one [K] x [K, 8*1024] contraction on the VPU —
+arithmetic intensity is low (streaming reduction), so the kernel is HBM
+-bandwidth-bound and the tiling simply keeps the MXU/VPU fed with
+aligned 2D tiles while streaming theta once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024        # lane-dim tile (multiple of 128)
+SUBLANE = 8        # sublane tile
+
+
+def _weighted_agg_kernel(w_ref, x_ref, o_ref):
+    """Blocks: w_ref [K, 1]; x_ref [K, 1, SUBLANE, LANE]; o_ref
+    [1, SUBLANE, LANE]. One weighted reduction over K per tile."""
+    x = x_ref[...].astype(jnp.float32)[:, 0]    # [K, 8, LANE]
+    w = w_ref[...].astype(jnp.float32)[:, 0]    # [K]
+    o_ref[0, :, :] = jnp.einsum("ksl,k->sl", x, w)
+
+
+def weighted_agg_flat(stacked_flat: jnp.ndarray, weights: jnp.ndarray, *,
+                      interpret: bool = True) -> jnp.ndarray:
+    """stacked_flat [K, D] -> [D]; D padded to SUBLANE*LANE tiles."""
+    K, D = stacked_flat.shape
+    tile = SUBLANE * LANE
+    D_pad = -(-D // tile) * tile
+    x = jnp.pad(stacked_flat, ((0, 0), (0, D_pad - D)))
+    x = x.reshape(K, D_pad // tile, SUBLANE, LANE)
+    w = weights.reshape(K, 1)
+    n_blocks = D_pad // tile
+
+    out = pl.pallas_call(
+        _weighted_agg_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((K, 1), lambda i: (0, 0)),
+            pl.BlockSpec((K, 1, SUBLANE, LANE), lambda i: (0, i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, SUBLANE, LANE), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, SUBLANE, LANE),
+                                       jnp.float32),
+        interpret=interpret,
+    )(w, x)
+    return out.reshape(D_pad)[:D].astype(stacked_flat.dtype)

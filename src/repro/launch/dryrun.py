@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
+the production mesh, with zero device allocation (ShapeDtypeStruct).
+
+MUST be the very first two lines (jax locks device count on first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.launch import mesh as mesh_mod
+from repro.launch.input_specs import input_specs, skip_reason, decode_window
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.sharding.policy import (ShardingPolicy, activation_sharding,
+                                   data_axes, sanitize, tree_param_specs)
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b")
+TYPE_RE = re.compile(r"\b([a-z]?[a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes_from_hlo(hlo: str) -> Dict[str, float]:
+    """Sum per-device result bytes of every collective op in optimized HLO."""
+    totals: Dict[str, float] = {}
+    for line in hlo.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if m is None or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[1]
+        lhs = lhs.split(m.group(0))[0]  # types before the op name
+        nbytes = 0.0
+        for dt, dims in TYPE_RE.findall(lhs):
+            if dt not in DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        if nbytes:
+            totals[kind] = totals.get(kind, 0.0) + nbytes
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _batch_shardings(mesh, policy, batch_specs):
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) != 1 else dp[0]
+    out = {}
+    for k, v in batch_specs.items():
+        spec = (dpa,) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, sanitize(mesh, v.shape, spec))
+    return out
+
+
+def _cache_shardings(mesh, policy, cache_struct):
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) != 1 else dp[0]
+    mp = "model" if policy.shard_cache_seq else None
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = leaf.shape
+        if name in ("k", "v", "xk", "xv"):
+            if len(shape) == 5:   # [n_super, B, S, KV, hd]
+                s = (None, dpa, mp, None, None)
+            else:                 # [B, S, KV, hd]
+                s = (dpa, mp, None, None)
+        elif name == "length":
+            s = ()
+        elif len(shape) >= 2:     # recurrent states [n_super?, B, ...]
+            s = ((None, dpa) if len(shape) > 2 else (dpa,)) + \
+                (None,) * (len(shape) - (2 if len(shape) > 2 else 1))
+        else:
+            s = (None,) * len(shape)
+        return NamedSharding(mesh, sanitize(mesh, shape, s))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def _shardings_of_specs(mesh, specs_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_lowered(arch: str, shape_name: str, *, multi_pod: bool,
+                  policy: Optional[ShardingPolicy] = None,
+                  donate: bool = True, cfg_override=None, unroll: int = 1):
+    """Returns (lowered, meta). Raises on skip (caller checks skip_reason)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    policy = policy or ShardingPolicy()
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    spec = input_specs(cfg, shape_name)
+    key = jax.random.PRNGKey(0)
+
+    params_struct = jax.eval_shape(lambda: T.init_lm(key, cfg))
+    param_specs = tree_param_specs(mesh, policy, params_struct)
+    params_shardings = _shardings_of_specs(mesh, param_specs)
+
+    with mesh, activation_sharding(mesh, policy):
+        if spec["kind"] == "train":
+            optimizer = adam(1e-4, grad_clip=1.0)
+            train_step, opt_init = T.make_train_step(cfg, optimizer,
+                                                     unroll=unroll)
+            opt_struct = jax.eval_shape(opt_init, params_struct)
+            opt_shardings = jax.tree_util.tree_map(
+                lambda l: NamedSharding(mesh, P()) if l.ndim == 0 else None,
+                opt_struct)
+            # mu/nu mirror the param shardings
+            opt_shardings = type(opt_struct)(
+                step=NamedSharding(mesh, P()),
+                mu=params_shardings, nu=params_shardings)
+            batch_shardings = _batch_shardings(mesh, policy, spec["batch"])
+            fn = jax.jit(train_step,
+                         in_shardings=(params_shardings, opt_shardings,
+                                       batch_shardings),
+                         donate_argnums=(0, 1) if donate else ())
+            lowered = fn.lower(params_struct, opt_struct, spec["batch"])
+        elif spec["kind"] == "prefill":
+            def prefill_fn(params, batch):
+                return T.prefill(cfg, params, batch["tokens"],
+                                 prefix_embeds=batch.get("prefix_embeds"),
+                                 enc_frames=batch.get("enc_frames"),
+                                 unroll=unroll)
+            batch_shardings = _batch_shardings(mesh, policy, spec["batch"])
+            fn = jax.jit(prefill_fn,
+                         in_shardings=(params_shardings, batch_shardings))
+            lowered = fn.lower(params_struct, spec["batch"])
+        else:  # decode
+            fw = spec["force_window"]
+
+            def serve_step(params, token, cache):
+                return T.decode_step(cfg, params, token, cache,
+                                     force_window=fw, unroll=unroll)
+            dp = data_axes(mesh)
+            dpa = dp if len(dp) != 1 else dp[0]
+            tok_sh = NamedSharding(mesh, sanitize(
+                mesh, spec["token"].shape, (dpa,)))
+            cache_sh = _cache_shardings(mesh, policy, spec["cache"])
+            fn = jax.jit(serve_step,
+                         in_shardings=(params_shardings, tok_sh, cache_sh),
+                         donate_argnums=(2,) if donate else ())
+            lowered = fn.lower(params_struct, spec["token"], spec["cache"])
+
+    meta = {"arch": arch, "shape": shape_name,
+            "multi_pod": multi_pod, "kind": spec["kind"],
+            "chips": int(np.prod(list(dict(mesh.shape).values()))),
+            "params": cfg.param_count()}
+    return lowered, meta
+
+
+def analyze(lowered, meta: Dict[str, Any]) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    out = dict(meta, compile_s=round(compile_s, 1))
+    try:
+        ma = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or
+                              getattr(ma, "temp_size_in_bytes", 0)),
+        }
+    except Exception as e:  # pragma: no cover
+        out["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        out["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    except Exception as e:  # pragma: no cover
+        out["cost"] = {"error": str(e)}
+    hlo = compiled.as_text()
+    out["collectives"] = collective_bytes_from_hlo(hlo)
+    out["hlo_bytes"] = len(hlo)
+    return out
+
+
+def _cost_tuple(res: Dict[str, Any]) -> Dict[str, float]:
+    return {"flops": res["cost"].get("flops", 0.0),
+            "bytes": res["cost"].get("bytes_accessed", 0.0),
+            "coll": res["collectives"].get("total", 0.0)}
+
+
+def calibrate_scan_costs(arch: str, shape_name: str, multi_pod: bool,
+                         policy: Optional[ShardingPolicy],
+                         res: Dict[str, Any]) -> None:
+    """XLA cost_analysis counts a lax.scan body ONCE (trip count is
+    invisible to the HLO cost model), so scanned-transformer flops /
+    bytes / collective totals underestimate by ~n_super. Calibrate with
+    a depth-2 twin lowered both scanned (counts 1 body) and unrolled
+    (counts 2): body = unrolled - scanned; corrected = full + (n_super-1)
+    * body. Adds 'cost_corrected' / 'collectives_corrected' in place."""
+    import dataclasses
+    cfg = get_config(arch)
+    pat = len(cfg.block_pattern)
+    n_super = cfg.n_layers // pat
+    if n_super < 2:
+        res["cost_corrected"] = _cost_tuple(res)
+        res["scan_correction"] = 1.0
+        return
+    kw = dict(n_layers=2 * pat)
+    if cfg.is_encoder_decoder:
+        kw["n_enc_layers"] = 2
+    cfg2 = dataclasses.replace(cfg, **kw)
+    rs = analyze(*build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                policy=policy, cfg_override=cfg2, unroll=1))
+    ru = analyze(*build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                policy=policy, cfg_override=cfg2, unroll=2))
+    full = _cost_tuple(res)
+    body = {k: max(0.0, _cost_tuple(ru)[k] - _cost_tuple(rs)[k])
+            for k in full}
+    # enc and dec scans share the body delta; both scale by ~n_super
+    corrected = {k: full[k] + (n_super - 1) * body[k] for k in full}
+    res["cost_corrected"] = corrected
+    res["scan_body"] = body
+    res["scan_correction"] = (corrected["flops"] /
+                              max(full["flops"], 1.0))
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             policy: Optional[ShardingPolicy] = None,
+             calibrate: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    reason = skip_reason(cfg, INPUT_SHAPES[shape_name])
+    if reason:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": reason}
+    lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
+                                  policy=policy)
+    res = analyze(lowered, meta)
+    if calibrate:
+        try:
+            calibrate_scan_costs(arch, shape_name, multi_pod, policy, res)
+        except Exception as e:  # calibration is best-effort
+            res["calibration_error"] = f"{type(e).__name__}: {e}"
+    if INPUT_SHAPES[shape_name].name == "long_500k" and \
+            decode_window(cfg, INPUT_SHAPES[shape_name]):
+        res["variant"] = "swa"
+    return res
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--no-cache-shard", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args(argv)
+
+    policy = ShardingPolicy(fsdp=not args.no_fsdp,
+                            seq_parallel=not args.no_seq_parallel,
+                            shard_cache_seq=not args.no_cache_shard)
+    archs = list_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2pod' if mp else '1pod'}"
+                t0 = time.time()
+                try:
+                    res = run_pair(arch, shape, mp, policy)
+                except Exception as e:
+                    res = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}"}
+                res["wall_s"] = round(time.time() - t0, 1)
+                results.append(res)
+                status = ("SKIP " + res["skipped"] if "skipped" in res else
+                          "ERROR " + res.get("error", "")[:200]
+                          if "error" in res else
+                          f"ok flops={res['cost'].get('flops', 0):.3e} "
+                          f"coll={res['collectives'].get('total', 0):.3e}B "
+                          f"peak={res['memory'].get('peak_bytes', 0)/2**30:.2f}GiB")
+                print(f"[dryrun] {tag}: {status} ({res['wall_s']}s)",
+                      flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(res) + "\n")
+    errs = [r for r in results if "error" in r]
+    if errs:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

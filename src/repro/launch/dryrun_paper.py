@@ -1,0 +1,327 @@
+"""Paper-technique dry-run: lower+compile the HuSCF split-federated
+training steps on the production mesh.
+
+Two subjects:
+  * huscf-gan       — the paper's cGAN with 256 clients over the paper's
+                      7 device profiles, 4 cuts each (GA-assigned),
+                      client populations sharded along the data axis.
+  * huscf-lm:<arch> — the §7.3 extension: 2-cut U-shaped split of an
+                      assigned LM with per-profile client stacks.
+
+Run:  python -m repro.launch.dryrun_paper [--multi-pod] [--lm granite-3-2b]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.genetic import GAConfig, optimize_cuts
+from repro.core.huscf import build_net_apply, _merge_bn
+from repro.core.latency import PAPER_DEVICES, PAPER_SERVER
+from repro.core.splitting import group_by_profile
+from repro.core import split_transformer as ST
+from repro.launch import mesh as mesh_mod
+from repro.launch.dryrun import analyze, collective_bytes_from_hlo
+from repro.models import gan
+from repro.models.gan import DISC_LAYER_DEFS, GEN_LAYER_DEFS, Z_DIM
+from repro.optim import adam
+from repro.sharding.policy import (ShardingPolicy, activation_sharding,
+                                   data_axes, sanitize)
+
+
+def _dp(mesh):
+    dp = data_axes(mesh)
+    return dp if len(dp) != 1 else dp[0]
+
+
+def build_gan_population(n_clients: int = 224, batch: int = 64):
+    """GA-assigned cuts for the client population over the paper's 7
+    profiles. Clients are laid out profile-contiguously with equal
+    per-profile counts so every stacked client axis is divisible by the
+    (pod x) data mesh axes — otherwise `sanitize` must drop the sharding
+    and the population silently replicates (measured: 0 collective
+    bytes, every chip computing all clients)."""
+    per = max(32, n_clients // 7 // 32 * 32)
+    devices = [PAPER_DEVICES[p] for p in range(7) for _ in range(per)]
+    res = optimize_cuts(devices, PAPER_SERVER, batch=batch,
+                        config=GAConfig(population_size=60, generations=10,
+                                        seed=0))
+    groups = group_by_profile(devices, res.cuts)
+    return groups, res
+
+
+def _stack_struct(init_fn, k):
+    return jax.eval_shape(
+        lambda: jax.vmap(lambda kk: init_fn(kk, jnp.float32))(
+            jax.random.split(jax.random.PRNGKey(0), k)))
+
+
+def gan_state_struct(groups):
+    """ShapeDtypeStruct state mirroring HuSCFTrainer._init_state."""
+    from repro.core.splitting import server_union_span
+    n_g, n_d = len(GEN_LAYER_DEFS), len(DISC_LAYER_DEFS)
+    server_g = {str(l): jax.eval_shape(
+        lambda l=l: GEN_LAYER_DEFS[l][0](jax.random.PRNGKey(0), jnp.float32))
+        for l in server_union_span(groups, "G", n_g)}
+    server_d = {str(l): jax.eval_shape(
+        lambda l=l: DISC_LAYER_DEFS[l][0](jax.random.PRNGKey(0), jnp.float32))
+        for l in server_union_span(groups, "D", n_d)}
+    client_g, client_d = {}, {}
+    for g in groups:
+        gh, gt = g.cut.g_h, g.cut.g_t
+        dh, dt = g.cut.d_h, g.cut.d_t
+        client_g[g.name] = {str(l): _stack_struct(GEN_LAYER_DEFS[l][0], g.size)
+                            for l in list(range(gh)) + list(range(gt, n_g))}
+        client_d[g.name] = {str(l): _stack_struct(DISC_LAYER_DEFS[l][0], g.size)
+                            for l in list(range(dh)) + list(range(dt, n_d))}
+    g_params = {"client": client_g, "server": server_g}
+    d_params = {"client": client_d, "server": server_d}
+    opt_init_g, _ = adam(2e-4)
+    opt_init_d, _ = adam(2e-4)
+    return {"G": g_params, "D": d_params,
+            "opt_g": jax.eval_shape(opt_init_g, g_params),
+            "opt_d": jax.eval_shape(opt_init_d, d_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def build_gan_step(groups, batch: int, concat_groups: bool = True):
+    """One HuSCF-GAN train step (same math as HuSCFTrainer._build_step).
+    concat_groups=False is the beyond-paper no-concat server schedule."""
+    gen_apply = build_net_apply(groups, "G", concat_groups=concat_groups)
+    disc_apply = build_net_apply(groups, "D", capture_middle=True,
+                                 concat_groups=concat_groups)
+    total_clients = sum(g.size for g in groups)
+    _, upd_g = adam(2e-4)
+    _, upd_d = adam(2e-4)
+
+    def mean_client_loss(logits, target):
+        tot = 0.0
+        for g in groups:
+            tot = tot + gan.bce_logits(logits[g.name].reshape(-1),
+                                       target) * g.size
+        return tot / total_clients
+
+    def step(state, batch_in):
+        g_params, d_params = state["G"], state["D"]
+
+        def d_loss(d_p):
+            fake, _, _, _ = gen_apply(
+                g_params["client"], g_params["server"],
+                {g.name: (batch_in["z"][g.name], batch_in["fy"][g.name])
+                 for g in groups}, True)
+            fake = {k: jax.lax.stop_gradient(v) for k, v in fake.items()}
+            lr_, ncr, nsr, mids = disc_apply(
+                d_p["client"], d_p["server"],
+                {g.name: (batch_in["img"][g.name], batch_in["y"][g.name])
+                 for g in groups}, True)
+            lf_, _, _, _ = disc_apply(
+                d_p["client"], d_p["server"],
+                {g.name: (fake[g.name], batch_in["fy"][g.name])
+                 for g in groups}, True)
+            return (mean_client_loss(lr_, 1.0) + mean_client_loss(lf_, 0.0),
+                    ({"client": ncr, "server": nsr}, mids))
+
+        (loss_d, (d_bn, mids)), grads_d = jax.value_and_grad(
+            d_loss, has_aux=True)(d_params)
+        opt_d, d_new = upd_d(state["opt_d"], grads_d, d_params)
+        d_new = _merge_bn(d_new, d_bn)
+
+        def g_loss(g_p):
+            fake, ncg, nsg, _ = gen_apply(
+                g_p["client"], g_p["server"],
+                {g.name: (batch_in["z"][g.name], batch_in["fy"][g.name])
+                 for g in groups}, True)
+            logits, _, _, _ = disc_apply(
+                d_new["client"], d_new["server"],
+                {g.name: (fake[g.name], batch_in["fy"][g.name])
+                 for g in groups}, True)
+            return mean_client_loss(logits, 1.0), {"client": ncg,
+                                                   "server": nsg}
+
+        (loss_g, g_bn), grads_g = jax.value_and_grad(
+            g_loss, has_aux=True)(g_params)
+        opt_g, g_new = upd_g(state["opt_g"], grads_g, g_params)
+        g_new = _merge_bn(g_new, g_bn)
+        return {"G": g_new, "D": d_new, "opt_g": opt_g, "opt_d": opt_d,
+                "step": state["step"] + 1}, {"loss_d": loss_d,
+                                             "loss_g": loss_g}
+
+    return step
+
+
+def gan_batch_struct(groups, batch, act_dtype=jnp.float32):
+    out = {"img": {}, "y": {}, "z": {}, "fy": {}}
+    for g in groups:
+        out["img"][g.name] = jax.ShapeDtypeStruct(
+            (g.size, batch, 28, 28, 1), act_dtype)
+        out["y"][g.name] = jax.ShapeDtypeStruct((g.size, batch), jnp.int32)
+        out["z"][g.name] = jax.ShapeDtypeStruct((g.size, batch, Z_DIM),
+                                                act_dtype)
+        out["fy"][g.name] = jax.ShapeDtypeStruct((g.size, batch), jnp.int32)
+    return out
+
+
+def _client_shardings(mesh, tree):
+    """Shard every stacked-client leading axis over the data axes."""
+    dpa = _dp(mesh)
+
+    def sh(leaf):
+        spec = (dpa,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, sanitize(mesh, leaf.shape, spec))
+    return jax.tree_util.tree_map(sh, tree)
+
+
+def run_gan(multi_pod: bool, n_clients: int = 224, batch: int = 64,
+            concat_groups: bool = True, bf16_acts: bool = False
+            ) -> Dict[str, Any]:
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    groups, ga = build_gan_population(n_clients, batch)
+    state = gan_state_struct(groups)
+    batch_struct = gan_batch_struct(
+        groups, batch, jnp.bfloat16 if bf16_acts else jnp.float32)
+    step = build_gan_step(groups, batch, concat_groups=concat_groups)
+
+    # shardings: client stacks + batch over data; server params replicated
+    # (they are small convs) — the activations concat over clients*batch
+    # shards over data via the inputs.
+    state_sh = jax.tree_util.tree_map(lambda _: None, state)
+    state_sh = {
+        "G": {"client": _client_shardings(mesh, state["G"]["client"]),
+              "server": jax.tree_util.tree_map(
+                  lambda _: NamedSharding(mesh, P()), state["G"]["server"])},
+        "D": {"client": _client_shardings(mesh, state["D"]["client"]),
+              "server": jax.tree_util.tree_map(
+                  lambda _: NamedSharding(mesh, P()), state["D"]["server"])},
+        "opt_g": None, "opt_d": None,
+        "step": NamedSharding(mesh, P()),
+    }
+    # opt states mirror the param shardings
+    state_sh["opt_g"] = type(state["opt_g"])(
+        step=NamedSharding(mesh, P()), mu=state_sh["G"], nu=state_sh["G"])
+    state_sh["opt_d"] = type(state["opt_d"])(
+        step=NamedSharding(mesh, P()), mu=state_sh["D"], nu=state_sh["D"])
+    batch_sh = _client_shardings(mesh, batch_struct)
+
+    policy = ShardingPolicy()
+    with mesh, activation_sharding(mesh, policy):
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state, batch_struct)
+    meta = {"arch": "huscf-gan", "shape": f"train_b{batch}_K{n_clients}",
+            "multi_pod": multi_pod, "kind": "paper-train",
+            "chips": int(np.prod(list(dict(mesh.shape).values()))),
+            "params": 3_018_182, "ga_latency_model_s": ga.latency,
+            "variant": ("paper-concat" if concat_groups else "no-concat")
+            + ("+bf16" if bf16_acts else "")}
+    return analyze(lowered, meta)
+
+
+def run_lm(arch: str, multi_pod: bool, *, seq: int = 1024,
+           per_client_batch: int = 2, n_weak: int = 32, n_strong: int = 32
+           ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    groups = ST.default_groups(cfg, n_weak=n_weak, n_strong=n_strong)
+    params = jax.eval_shape(
+        lambda: ST.init_split_lm(jax.random.PRNGKey(0), cfg, groups))
+    step, opt_init = ST.make_split_train_step(cfg, groups)
+    opt = jax.eval_shape(opt_init, params)
+    batch = {
+        "tokens": {g.name: jax.ShapeDtypeStruct(
+            (g.n_clients, per_client_batch, seq), jnp.int32) for g in groups},
+        "labels": {g.name: jax.ShapeDtypeStruct(
+            (g.n_clients, per_client_batch, seq), jnp.int32) for g in groups},
+    }
+    # server trunk: standard TP+FSDP rules; clients: stacked axis over
+    # data, embedding tables additionally vocab-sharded over model
+    from repro.sharding.policy import tree_param_specs
+    policy0 = ShardingPolicy()
+    server_specs = tree_param_specs(mesh, policy0, params["server"])
+    server_sh = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), server_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    dpa = _dp(mesh)
+
+    def client_leaf_sh(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "table":      # [K, V, D]
+            spec = (dpa, "model", None)
+        else:
+            spec = (dpa,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, sanitize(mesh, leaf.shape, spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params["clients"])
+    clients_sh = jax.tree_util.tree_unflatten(
+        treedef, [client_leaf_sh(pth, l) for pth, l in flat])
+    params_sh = {"server": server_sh, "clients": clients_sh}
+    opt_sh = type(opt)(step=NamedSharding(mesh, P()),
+                       mu=params_sh, nu=params_sh)
+    batch_sh = _client_shardings(mesh, batch)
+    policy = ShardingPolicy()
+    with mesh, activation_sharding(mesh, policy):
+        fn = jax.jit(step, in_shardings=(params_sh, opt_sh, batch_sh),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params, opt, batch)
+    meta = {"arch": f"huscf-lm:{arch}", "shape": f"split_train_s{seq}",
+            "multi_pod": multi_pod, "kind": "paper-train",
+            "chips": int(np.prod(list(dict(mesh.shape).values()))),
+            "params": cfg.param_count()}
+    return analyze(lowered, meta)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--lm", default=None,
+                    help="also dry-run the split-LM for this arch")
+    ap.add_argument("--skip-gan", action="store_true")
+    ap.add_argument("--no-concat", action="store_true",
+                    help="beyond-paper per-group server schedule")
+    ap.add_argument("--bf16", action="store_true",
+                    help="bf16 activations (beyond-paper)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        if not args.skip_gan:
+            t0 = time.time()
+            res = run_gan(mp, concat_groups=not args.no_concat,
+                          bf16_acts=args.bf16)
+            res["wall_s"] = round(time.time() - t0, 1)
+            results.append(res)
+            print(f"[paper-dryrun] huscf-gan x {'2pod' if mp else '1pod'}: "
+                  f"flops={res['cost'].get('flops', 0):.3e} "
+                  f"coll={res['collectives'].get('total', 0):.3e}B "
+                  f"peak={res['memory'].get('peak_bytes', 0)/2**30:.2f}GiB "
+                  f"({res['wall_s']}s)", flush=True)
+        if args.lm:
+            t0 = time.time()
+            res = run_lm(args.lm, mp)
+            res["wall_s"] = round(time.time() - t0, 1)
+            results.append(res)
+            print(f"[paper-dryrun] huscf-lm:{args.lm} x "
+                  f"{'2pod' if mp else '1pod'}: "
+                  f"flops={res['cost'].get('flops', 0):.3e} "
+                  f"coll={res['collectives'].get('total', 0):.3e}B "
+                  f"peak={res['memory'].get('peak_bytes', 0)/2**30:.2f}GiB "
+                  f"({res['wall_s']}s)", flush=True)
+    if args.out:
+        with open(args.out, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) pair.
+
+Weak-type-correct, shardable, zero allocation. Semantics per family:
+
+ * dense/moe/hybrid/ssm — tokens [B, S] (train/prefill); decode shapes
+   supply a single token [B] plus a context-length cache.
+ * vlm  — `num_prefix_embeds` patch embeddings [B, P, D] (frontend stub)
+   followed by text tokens [B, S-P]; the total context is S.
+ * audio (whisper, enc-dec) — encoder frame embeddings [B, S, D] (mel+
+   conv stub); decoder tokens bounded by max_target_len. "Sequence
+   length" counts encoder frames (the long axis in speech workloads).
+ * long_500k on pure full-attention archs uses the sliding-window
+   variant (force_window) per DESIGN.md §Decode-shape applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+from repro.models import transformer as T
+
+SWA_FALLBACK_WINDOW = 4096
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """force_window to apply for this (arch, shape), None = arch default."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        if cfg.long_context_variant == "swa":
+            return SWA_FALLBACK_WINDOW
+    return None
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    """Return a reason string if this pair is skipped (DESIGN.md notes)."""
+    if shape.kind == "decode" and cfg.arch_type == "gan":
+        return "GAN has no autoregressive decode step"
+    if shape.name == "long_500k":
+        if cfg.is_encoder_decoder:
+            return ("whisper positional/architectural cap (max 30s windows; "
+                    "448-token decoder) — skipped per DESIGN.md")
+        if not cfg.supports_long_context and cfg.long_context_variant is None:
+            return "pure full attention, no sub-quadratic variant"
+    return None
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: InputShape
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        S_dec = cfg.max_target_len
+        return {"tokens": _struct((B, S_dec), jnp.int32),
+                "labels": _struct((B, S_dec), jnp.int32),
+                "enc_frames": _struct((B, S, cfg.d_model), jnp.bfloat16)}
+    if cfg.frontend == "vision":
+        P = min(cfg.num_prefix_embeds, S // 2)
+        return {"tokens": _struct((B, S - P), jnp.int32),
+                "labels": _struct((B, S - P), jnp.int32),
+                "prefix_embeds": _struct((B, P, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": _struct((B, S), jnp.int32),
+            "labels": _struct((B, S), jnp.int32)}
+
+
+def prefill_specs(cfg: ArchConfig, shape: InputShape
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {"tokens": _struct((B, cfg.max_target_len // 2), jnp.int32),
+                "enc_frames": _struct((B, S, cfg.d_model), jnp.bfloat16)}
+    if cfg.frontend == "vision":
+        P = min(cfg.num_prefix_embeds, S // 2)
+        return {"tokens": _struct((B, S - P), jnp.int32),
+                "prefix_embeds": _struct((B, P, cfg.d_model), jnp.bfloat16)}
+    return {"tokens": _struct((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ArchConfig, shape: InputShape
+                 ) -> Tuple[jax.ShapeDtypeStruct, Any]:
+    """Returns (token spec [B], cache struct tree with ctx_len context)."""
+    B, S = shape.global_batch, shape.seq_len
+    fw = decode_window(cfg, shape)
+    if cfg.is_encoder_decoder:
+        # self-attn cache bounded by the decoder cap; cross cache = S frames
+        def mk():
+            c = T.init_cache(cfg, B, cfg.max_target_len)
+            for key, entry in c["scanned"].items():
+                n_sup = jax.tree_util.tree_leaves(entry)[0].shape[0]
+                hd = cfg.resolved_head_dim
+                entry["xk"] = jnp.zeros((n_sup, B, S, cfg.n_kv_heads, hd),
+                                        cfg.dtype)
+                entry["xv"] = jnp.zeros((n_sup, B, S, cfg.n_kv_heads, hd),
+                                        cfg.dtype)
+            return c
+        cache = jax.eval_shape(mk)
+    else:
+        cache = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, S, force_window=fw))
+    return _struct((B,), jnp.int32), cache
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"kind": "train", "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "batch": prefill_specs(cfg, shape)}
+    token, cache = decode_specs(cfg, shape)
+    return {"kind": "decode", "token": token, "cache": cache,
+            "force_window": decode_window(cfg, shape)}

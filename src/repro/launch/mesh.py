@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; `pod` is an outer
+data-parallel axis (DCN-connected).
+
+`make_production_mesh` is a function (never a module-level constant) so
+importing this module touches no jax device state — required because
+the dry-run forces 512 host devices while tests must see 1.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests/examples (no sharding)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# hardware constants (TPU v5e) for the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+CHIP_HBM_BYTES = 16 * 1024 ** 3

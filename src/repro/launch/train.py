@@ -1,0 +1,120 @@
+"""Training launcher.
+
+Two modes:
+  * huscf (default for --arch huscf-gan): the paper's split-federated
+    GAN over a heterogeneous client population.
+  * centralized: standard data+tensor-parallel LM training on synthetic
+    token streams for any assigned --arch (smoke-scale on CPU; the full
+    configs are exercised via dryrun.py).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch huscf-gan \
+      --scenario 2dom_noniid --clients 8 --epochs 4
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+      --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def train_huscf_gan(args) -> None:
+    from repro.core import HuSCFConfig, HuSCFTrainer, PAPER_DEVICES
+    from repro.data import build_scenario
+    from repro.checkpoint import save_checkpoint
+
+    clients = build_scenario(args.scenario, num_clients=args.clients,
+                             base_size=args.base_size, seed=args.seed)
+    devices = [PAPER_DEVICES[i % 7] for i in range(args.clients)]
+    tr = HuSCFTrainer(clients, devices,
+                      config=HuSCFConfig(batch=args.batch,
+                                         federate_every=args.federate_every,
+                                         seed=args.seed,
+                                         use_kernel=args.use_kernel))
+    print(f"[train] GA latency model: {tr.ga_latency:.2f}s/iter, "
+          f"{len(tr.groups)} profile groups")
+    for ep in range(args.epochs):
+        t0 = time.time()
+        m = tr.train_epoch()
+        print(f"[train] epoch {ep + 1}: loss_d={m['loss_d']:.3f} "
+              f"loss_g={m['loss_g']:.3f} ({time.time() - t0:.1f}s)",
+              flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, tr.state, step=tr.epoch)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+def train_lm(args) -> None:
+    from repro.configs import get_config, get_smoke_config
+    from repro.data import lm_batches
+    from repro.models import transformer as T
+    from repro.optim import adam, warmup_cosine
+    from repro.checkpoint import save_checkpoint
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_lm(key, cfg)
+    opt = adam(warmup_cosine(args.lr, 10, max(args.steps, 20)),
+               grad_clip=1.0)
+    train_step, opt_init = T.make_train_step(cfg, opt)
+    opt_state = opt_init(params)
+    step = jax.jit(train_step)
+    gen = lm_batches(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    for i in range(args.steps):
+        toks, labs = next(gen)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        if cfg.frontend == "vision":
+            rng = np.random.default_rng(i)
+            batch["prefix_embeds"] = jnp.asarray(rng.normal(
+                0, 1, (args.batch, cfg.num_prefix_embeds, cfg.d_model)),
+                dtype=jnp.float32)
+        if cfg.is_encoder_decoder:
+            rng = np.random.default_rng(i)
+            batch["enc_frames"] = jnp.asarray(rng.normal(
+                0, 1, (args.batch, cfg.num_prefix_embeds, cfg.d_model)),
+                dtype=jnp.float32)
+            batch["tokens"] = batch["tokens"][:, : cfg.max_target_len]
+            batch["labels"] = batch["labels"][:, : cfg.max_target_len]
+        t0 = time.time()
+        params, opt_state, m = step(params, opt_state, batch)
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"[train] step {i}: loss={float(m['loss']):.4f} "
+                  f"({time.time() - t0:.2f}s)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print(f"[train] checkpoint -> {args.ckpt}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scenario", default="2dom_noniid")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--base-size", type=int, default=128)
+    ap.add_argument("--epochs", type=int, default=4)
+    ap.add_argument("--federate-every", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="Pallas weighted_agg for federation")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+    if args.arch == "huscf-gan":
+        train_huscf_gan(args)
+    else:
+        train_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.metrics.scores import dataset_score, fid
+from repro.metrics.classification import ClassifierReport, evaluate, wald_ci
+
+__all__ = ["dataset_score", "fid", "ClassifierReport", "evaluate", "wald_ci"]

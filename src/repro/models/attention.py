@@ -1,0 +1,234 @@
+"""Attention substrate: RoPE, GQA, chunked (flash-style) training
+attention, sliding windows, and KV-cache decode.
+
+Training attention is *chunked* with an online-softmax accumulator
+(`lax.scan` over KV chunks per query chunk) so activation memory is
+O(S * chunk) instead of O(S^2) — mandatory for prefill_32k and the big
+dry-run shapes. Pure JAX and differentiable; the TPU Pallas twin of the
+decode path lives in repro/kernels/flash_decode.py.
+
+Shapes: x [B, S, D]; q [B, S, H, hd]; k/v [B, S, KV, hd].
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import nn
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x [B, S, N, hd]; positions [B, S] (or [S])."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, *,
+              qkv_bias: bool = False, dtype=jnp.float32) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": nn.normal_init(std)(kq, (d_model, n_heads, head_dim), dtype),
+        "wk": nn.normal_init(std)(kk, (d_model, n_kv, head_dim), dtype),
+        "wv": nn.normal_init(std)(kv, (d_model, n_kv, head_dim), dtype),
+        "wo": nn.normal_init(std / math.sqrt(2.0))(
+            ko, (n_heads, head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((n_kv, head_dim), dtype)
+        p["bv"] = jnp.zeros((n_kv, head_dim), dtype)
+    return p
+
+
+def qkv_proj(p: Dict, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p: Dict, o: jnp.ndarray) -> jnp.ndarray:
+    # row-parallel output matmul: partial sums all-reduce in operand
+    # dtype (bf16) — see §Perf iteration 9
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"].astype(o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _chunk_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                window: Optional[int]) -> jnp.ndarray:
+    """[Sq, Sk] True where attendable (causal + optional sliding window)."""
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      window: Optional[int] = None,
+                      q_chunk: int = 512, k_chunk: int = 512,
+                      causal: bool = True) -> jnp.ndarray:
+    """Flash-style attention. q [B,S,H,hd], k/v [B,S,KV,hd] -> [B,S,H,hd].
+
+    GQA via head grouping; online softmax over KV chunks.
+    """
+    B, S, H, hd = q.shape
+    S_kv = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, S)
+    k_chunk = min(k_chunk, S_kv)
+    # pad both sequence axes to chunk multiples
+    Sq = -(-S // q_chunk) * q_chunk
+    Sk = -(-S_kv // k_chunk) * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sq - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk - S_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk - S_kv), (0, 0), (0, 0)))
+    nq, nk = Sq // q_chunk, Sk // k_chunk
+
+    # [B, nq, qc, KV, G, hd]
+    qh = qp.reshape(B, nq, q_chunk, KV, G, hd)
+    kh = kp.reshape(B, nk, k_chunk, KV, hd)
+    vh = vp.reshape(B, nk, k_chunk, KV, hd)
+    k_valid = (jnp.arange(Sk) < S_kv).reshape(nk, k_chunk)
+
+    def per_q_chunk_impl(qi, q_blk, kh_b, vh_b):
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m_max, denom = carry
+            kj, k_blk, v_blk, kvalid = inp
+            k_pos = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("qkgh,ckh->qkgc", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            if causal:
+                mask = _chunk_mask(q_pos, k_pos, window)
+            else:
+                mask = jnp.ones((q_chunk, k_chunk), bool)
+            mask = mask & kvalid[None, :]
+            s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+            blk_max = jnp.max(s, axis=-1)
+            new_max = jnp.maximum(m_max, blk_max)
+            corr = jnp.exp(m_max - new_max)
+            p = jnp.exp(s - new_max[..., None])
+            acc = acc * corr[..., None] + jnp.einsum(
+                "qkgc,ckh->qkgh", p, v_blk.astype(jnp.float32))
+            denom = denom * corr + p.sum(-1)
+            return (acc, new_max, denom), None
+
+        acc0 = jnp.zeros((q_chunk, KV, G, hd), jnp.float32)
+        max0 = jnp.full((q_chunk, KV, G), NEG_INF, jnp.float32)
+        den0 = jnp.zeros((q_chunk, KV, G), jnp.float32)
+        (acc, _, denom), _ = lax.scan(
+            kv_step, (acc0, max0, den0),
+            (jnp.arange(nk), kh_b, vh_b, k_valid))
+        return acc / jnp.maximum(denom[..., None], 1e-30)
+
+    def batch_fn(q_b, kh_b, vh_b):
+        return jax.vmap(lambda qi, qb: per_q_chunk_impl(qi, qb, kh_b, vh_b))(
+            jnp.arange(nq), q_b)
+
+    out = jax.vmap(batch_fn)(qh, kh, vh)  # [B,nq,qc,KV,G,hd]
+    out = out.reshape(B, Sq, H, hd)[:, :S]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (one new token vs a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len: jnp.ndarray
+                     ) -> jnp.ndarray:
+    """q [B,1,H,hd]; caches [B,S,KV,hd]; cache_len [] or [B].
+
+    Full-softmax over the (masked) cache. The Pallas flash_decode kernel
+    implements the same contraction blocked over S.
+    """
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qh = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)
+    if cache_len.ndim == 0:
+        valid = pos[None, :] < cache_len
+    else:
+        valid = pos[None, :] < cache_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Ring-buffer KV cache (bounded by window for SWA archs)."""
+    k: jnp.ndarray   # [B, S_max, KV, hd]
+    v: jnp.ndarray
+    length: jnp.ndarray  # [] int32 — logical tokens seen
+
+    @staticmethod
+    def zeros(batch: int, s_max: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16) -> "KVCache":
+        return KVCache(jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+                       jnp.zeros((batch, s_max, n_kv, head_dim), dtype),
+                       jnp.zeros((), jnp.int32))
+
+    def append(self, k_new: jnp.ndarray, v_new: jnp.ndarray) -> "KVCache":
+        """Append one token (k_new [B,1,KV,hd]) at ring position."""
+        s_max = self.k.shape[1]
+        idx = self.length % s_max
+        k = lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype),
+                                     (0, idx, 0, 0))
+        v = lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype),
+                                     (0, idx, 0, 0))
+        return KVCache(k, v, self.length + 1)
+
+
+jax.tree_util.register_pytree_node(
+    KVCache,
+    lambda c: ((c.k, c.v, c.length), None),
+    lambda _, xs: KVCache(*xs))

@@ -1,0 +1,98 @@
+"""Small CNN classifier used for evaluation (paper §5 metric 1 & 2).
+
+Trained (a) on real data to act as the dataset-specific scoring network
+(IS-style score + FID features), and (b) on generated samples to compute
+the classification metrics vs a real test set.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import nn
+from repro.optim import adam
+
+
+def init_cnn(key, num_classes: int = 10, dtype=jnp.float32) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "c1": nn.conv2d_init(k1, 1, 32, 3, dtype=dtype),
+        "c2": nn.conv2d_init(k2, 32, 64, 3, dtype=dtype),
+        "fc1": nn.dense_init(k3, 7 * 7 * 64, 128, dtype=dtype),
+        "fc2": nn.dense_init(k4, 128, num_classes, dtype=dtype),
+    }
+
+
+def cnn_apply(params: Dict, x: jnp.ndarray,
+              return_features: bool = False):
+    h = nn.conv2d_apply(params["c1"], x, stride=2)
+    h = jax.nn.relu(h)
+    h = nn.conv2d_apply(params["c2"], h, stride=2)
+    h = jax.nn.relu(h)
+    h = h.reshape(h.shape[0], -1)
+    feat = jax.nn.relu(nn.dense_apply(params["fc1"], h))
+    logits = nn.dense_apply(params["fc2"], feat)
+    if return_features:
+        return logits, feat
+    return logits
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_classifier(key, images: np.ndarray, labels: np.ndarray, *,
+                     epochs: int = 3, batch: int = 128, lr: float = 1e-3,
+                     num_classes: int = 10) -> Dict:
+    """Train the CNN; returns params. images in [-1,1] [N,H,W,1]."""
+    params = init_cnn(key, num_classes)
+    opt_init, opt_update = adam(lr)
+    opt_state = opt_init(params)
+
+    @jax.jit
+    def step(params, opt_state, xb, yb):
+        loss, grads = jax.value_and_grad(
+            lambda p: xent(cnn_apply(p, xb), yb))(params)
+        opt_state, params = opt_update(opt_state, grads, params)
+        return params, opt_state, loss
+
+    rng = np.random.default_rng(0)
+    n = images.shape[0]
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for b in range(max(1, n // batch)):
+            sel = order[b * batch:(b + 1) * batch]
+            if sel.size == 0:
+                continue
+            params, opt_state, _ = step(params, opt_state,
+                                        jnp.asarray(images[sel]),
+                                        jnp.asarray(labels[sel]))
+    return params
+
+
+def predict(params: Dict, images: np.ndarray, batch: int = 512) -> np.ndarray:
+    outs = []
+    apply = jax.jit(lambda p, x: jnp.argmax(cnn_apply(p, x), -1))
+    for b in range(0, images.shape[0], batch):
+        outs.append(np.asarray(apply(params, jnp.asarray(images[b:b + batch]))))
+    return np.concatenate(outs)
+
+
+def predict_proba(params: Dict, images: np.ndarray, batch: int = 512) -> np.ndarray:
+    outs = []
+    apply = jax.jit(lambda p, x: jax.nn.softmax(cnn_apply(p, x), -1))
+    for b in range(0, images.shape[0], batch):
+        outs.append(np.asarray(apply(params, jnp.asarray(images[b:b + batch]))))
+    return np.concatenate(outs)
+
+
+def features(params: Dict, images: np.ndarray, batch: int = 512) -> np.ndarray:
+    outs = []
+    apply = jax.jit(lambda p, x: cnn_apply(p, x, return_features=True)[1])
+    for b in range(0, images.shape[0], batch):
+        outs.append(np.asarray(apply(params, jnp.asarray(images[b:b + batch]))))
+    return np.concatenate(outs)

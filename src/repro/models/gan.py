@@ -1,0 +1,234 @@
+"""Conditional GAN exactly per paper Table 3, built as a *layered* model.
+
+Generator  (z in R^100, label in R^10 -> 28x28 image):
+  L0: label embed + concat, FC -> 256*7*7, BN, ReLU
+  L1: ConvT 256->128 4x4 s2, BN, ReLU          (7 -> 14)
+  L2: ConvT 128->128 3x3 s1, BN, ReLU          (14 -> 14)   <- middle
+  L3: ConvT 128->64  4x4 s2, BN, ReLU          (14 -> 28)
+  L4: ConvT 64->1    3x3 s1, Tanh              (28 -> 28)
+
+Discriminator (image 28x28 + label channel -> prob):
+  L0: label embed -> 28x28 channel, concat; Conv 2->64   4x4 s2, BN, LReLU (28->14)
+  L1: Conv 64->128  4x4 s2, BN, LReLU                    (14->7)
+  L2: Conv 128->128 3x3 s1, BN, LReLU                    (7->7)  <- middle
+  L3: Conv 128->256 4x4 s2, BN, LReLU                    (7->4)
+  L4: Flatten, FC->1 (logit; sigmoid applied in loss)
+
+Each layer is an (init, apply) pair; `apply(params, x, train)` returns
+(y, new_params) because of BatchNorm state. The HuSCF splitter treats
+the model as the ordered list of these 5 layers.
+
+FLOP/activation-byte accounting per layer (used by the latency model,
+paper Eq. 3-6) is provided by `gan_layer_costs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+Z_DIM = 100
+NUM_CLASSES = 10
+IMG = 28
+
+GEN_LAYERS = 5
+DISC_LAYERS = 5
+GEN_MIDDLE = GEN_LAYERS // 2   # layer index that must live on the server
+DISC_MIDDLE = DISC_LAYERS // 2
+
+
+# ---------------------------------------------------------------------------
+# Generator layers
+# ---------------------------------------------------------------------------
+
+def _g0_init(key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": nn.embedding_init(k1, NUM_CLASSES, NUM_CLASSES, dtype=dtype),
+        "fc": nn.dense_init(k2, Z_DIM + NUM_CLASSES, 256 * 7 * 7, dtype=dtype),
+        "bn": nn.batchnorm_init(256, dtype),
+    }
+
+
+def _g0_apply(p, x, train):
+    z, y = x  # z [B, Z], y [B] int
+    e = nn.embedding_apply(p["embed"], y)
+    h = jnp.concatenate([z, e.astype(z.dtype)], -1)
+    h = nn.dense_apply(p["fc"], h)
+    h = h.reshape(h.shape[0], 7, 7, 256)
+    h, bn = nn.batchnorm_apply(p["bn"], h, train=train)
+    return jax.nn.relu(h), {**p, "bn": bn}
+
+
+def _gconvt_init(cin, cout, k):
+    def init(key, dtype):
+        return {"convt": nn.convT2d_init(key, cin, cout, k, dtype=dtype),
+                "bn": nn.batchnorm_init(cout, dtype)}
+    return init
+
+
+def _gconvt_apply(stride, final=False):
+    def apply(p, x, train):
+        h = nn.convT2d_apply(p["convt"], x, stride=stride)
+        if final:
+            return jnp.tanh(h), p
+        h, bn = nn.batchnorm_apply(p["bn"], h, train=train)
+        return jax.nn.relu(h), {**p, "bn": bn}
+    return apply
+
+
+def _g4_init(key, dtype):
+    return {"convt": nn.convT2d_init(key, 64, 1, 3, dtype=dtype)}
+
+
+GEN_LAYER_DEFS: List[Tuple[Callable, Callable]] = [
+    (_g0_init, _g0_apply),
+    (_gconvt_init(256, 128, 4), _gconvt_apply(2)),
+    (_gconvt_init(128, 128, 3), _gconvt_apply(1)),
+    (_gconvt_init(128, 64, 4), _gconvt_apply(2)),
+    (_g4_init, _gconvt_apply(1, final=True)),
+]
+
+
+# ---------------------------------------------------------------------------
+# Discriminator layers
+# ---------------------------------------------------------------------------
+
+def _d0_init(key, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"embed": nn.embedding_init(k1, NUM_CLASSES, IMG * IMG, dtype=dtype),
+            "conv": nn.conv2d_init(k2, 2, 64, 4, dtype=dtype),
+            "bn": nn.batchnorm_init(64, dtype)}
+
+
+def _d0_apply(p, x, train):
+    img, y = x  # img [B,28,28,1], y [B]
+    e = nn.embedding_apply(p["embed"], y).reshape(-1, IMG, IMG, 1)
+    h = jnp.concatenate([img, e.astype(img.dtype)], -1)
+    h = nn.conv2d_apply(p["conv"], h, stride=2)
+    h, bn = nn.batchnorm_apply(p["bn"], h, train=train)
+    return nn.leaky_relu(h), {**p, "bn": bn}
+
+
+def _dconv_init(cin, cout, k):
+    def init(key, dtype):
+        return {"conv": nn.conv2d_init(key, cin, cout, k, dtype=dtype),
+                "bn": nn.batchnorm_init(cout, dtype)}
+    return init
+
+
+def _dconv_apply(stride):
+    def apply(p, x, train):
+        h = nn.conv2d_apply(p["conv"], x, stride=stride)
+        h, bn = nn.batchnorm_apply(p["bn"], h, train=train)
+        return nn.leaky_relu(h), {**p, "bn": bn}
+    return apply
+
+
+def _d4_init(key, dtype):
+    return {"fc": nn.dense_init(key, 4 * 4 * 256, 1, dtype=dtype)}
+
+
+def _d4_apply(p, x, train):
+    h = x.reshape(x.shape[0], -1)
+    return nn.dense_apply(p["fc"], h)[:, 0], p  # logits
+
+
+DISC_LAYER_DEFS: List[Tuple[Callable, Callable]] = [
+    (_d0_init, _d0_apply),
+    (_dconv_init(64, 128, 4), _dconv_apply(2)),
+    (_dconv_init(128, 128, 3), _dconv_apply(1)),
+    (_dconv_init(128, 256, 4), _dconv_apply(2)),
+    (_d4_init, _d4_apply),
+]
+
+
+def init_generator(key, dtype=jnp.float32) -> List[Dict]:
+    keys = jax.random.split(key, GEN_LAYERS)
+    return [d[0](k, dtype) for d, k in zip(GEN_LAYER_DEFS, keys)]
+
+
+def init_discriminator(key, dtype=jnp.float32) -> List[Dict]:
+    keys = jax.random.split(key, DISC_LAYERS)
+    return [d[0](k, dtype) for d, k in zip(DISC_LAYER_DEFS, keys)]
+
+
+def run_layers(defs, params: List[Dict], x, *, start: int, stop: int,
+               train: bool):
+    """Run layers [start, stop); returns (activations, new_params_list)."""
+    new_params = list(params)
+    for i in range(start, stop):
+        x, new_params[i] = defs[i][1](params[i], x, train)
+    return x, new_params
+
+
+def generator_forward(params, z, y, *, train: bool):
+    return run_layers(GEN_LAYER_DEFS, params, (z, y), start=0,
+                      stop=GEN_LAYERS, train=train)
+
+
+def discriminator_forward(params, img, y, *, train: bool):
+    return run_layers(DISC_LAYER_DEFS, params, (img, y), start=0,
+                      stop=DISC_LAYERS, train=train)
+
+
+# ---------------------------------------------------------------------------
+# per-layer cost model (FLOPs forward, activation bytes out) for latency Eq 3-6
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    flops_fwd: float      # per-sample forward FLOPs
+    act_bytes: float      # per-sample activation bytes at layer OUTPUT
+    params: int
+
+    @property
+    def flops_bwd(self) -> float:
+        return 2.0 * self.flops_fwd  # standard backward ~ 2x forward
+
+
+def _conv_cost(h, w, cin, cout, k):
+    return 2.0 * h * w * cin * cout * k * k
+
+
+GEN_LAYER_COSTS: List[LayerCost] = [
+    LayerCost(2.0 * (Z_DIM + NUM_CLASSES) * 256 * 49, 7 * 7 * 256 * 4, (Z_DIM + NUM_CLASSES) * 256 * 49 + 256 * 49 + 100),
+    LayerCost(_conv_cost(14, 14, 256, 128, 4), 14 * 14 * 128 * 4, 256 * 128 * 16 + 128),
+    LayerCost(_conv_cost(14, 14, 128, 128, 3), 14 * 14 * 128 * 4, 128 * 128 * 9 + 128),
+    LayerCost(_conv_cost(28, 28, 128, 64, 4), 28 * 28 * 64 * 4, 128 * 64 * 16 + 64),
+    LayerCost(_conv_cost(28, 28, 64, 1, 3), 28 * 28 * 1 * 4, 64 * 9 + 1),
+]
+
+DISC_LAYER_COSTS: List[LayerCost] = [
+    LayerCost(_conv_cost(14, 14, 2, 64, 4), 14 * 14 * 64 * 4, 2 * 64 * 16 + 64 + 10 * 784),
+    LayerCost(_conv_cost(7, 7, 64, 128, 4), 7 * 7 * 128 * 4, 64 * 128 * 16 + 128),
+    LayerCost(_conv_cost(7, 7, 128, 128, 3), 7 * 7 * 128 * 4, 128 * 128 * 9 + 128),
+    LayerCost(_conv_cost(4, 4, 128, 256, 4), 4 * 4 * 256 * 4, 128 * 256 * 16 + 256),
+    LayerCost(2.0 * 4 * 4 * 256 * 1, 1 * 4, 4 * 4 * 256 + 1),
+]
+
+
+def gan_layer_costs():
+    return GEN_LAYER_COSTS, DISC_LAYER_COSTS
+
+
+# ---------------------------------------------------------------------------
+# GAN losses (non-saturating BCE on logits, as in the paper's cGAN)
+# ---------------------------------------------------------------------------
+
+def bce_logits(logits, target: float):
+    t = jnp.full_like(logits, target)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * t + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def d_loss_fn(d_logits_real, d_logits_fake):
+    return bce_logits(d_logits_real, 1.0) + bce_logits(d_logits_fake, 0.0)
+
+
+def g_loss_fn(d_logits_fake):
+    return bce_logits(d_logits_fake, 1.0)

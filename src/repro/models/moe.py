@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN — GShard/Switch-style dispatch & combine.
+
+Top-k routing with capacity limits, expressed as einsums over a dispatch
+one-hot tensor so the whole thing is MXU matmuls and partitions cleanly:
+experts shard over the mesh 'model' axis when `n_experts % model == 0`
+(expert parallelism with all-to-all inserted by GSPMD), otherwise the
+expert FFN dim shards over 'model' (tensor parallelism inside experts).
+
+Aux losses: switch load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, *,
+             mlp_variant: str = "swiglu", dtype=jnp.float32) -> Dict:
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    std = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": nn.normal_init(std)(kr, (d_model, n_experts), jnp.float32),
+        "wi": nn.normal_init(std)(ki, (n_experts, d_model, d_ff), dtype),
+        "wo": nn.normal_init(1.0 / math.sqrt(d_ff))(
+            ko, (n_experts, d_ff, d_model), dtype),
+    }
+    if mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = nn.normal_init(std)(kg, (n_experts, d_model, d_ff), dtype)
+    return p
+
+
+def moe_apply(p: Dict, x: jnp.ndarray, *, top_k: int,
+              capacity_factor: float = 1.25,
+              mlp_variant: str = "swiglu"
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x [B, S, D] -> (out [B, S, D], aux losses).
+
+    GShard-style *grouped* dispatch: each batch row is a routing group
+    with its own capacity C = cf * S * k / E, so dispatch/combine are
+    [B, S, E, C] (shardable over the data axis) instead of a single
+    [B*S, E, B*C] monolith — B x smaller, and each device only holds its
+    own rows' dispatch tensors.
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # [B, S, E]
+
+    # --- top-k gating, renormalized over the chosen experts
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(capacity_factor * S * top_k / E))
+
+    # --- dispatch/combine per group, looping over the k slots
+    combine = jnp.zeros((B, S, E, capacity), jnp.float32)
+    dispatch = jnp.zeros((B, S, E, capacity), bool)
+    counts = jnp.zeros((B, E), jnp.int32)   # per-group expert fill
+    for slot in range(top_k):
+        e = gate_idx[..., slot]                           # [B, S]
+        onehot = jax.nn.one_hot(e, E, dtype=jnp.int32)    # [B, S, E]
+        pos = jnp.cumsum(onehot, axis=1) - 1 + counts[:, None, :]
+        pos_e = jnp.take_along_axis(pos, e[..., None], 2)[..., 0]  # [B, S]
+        keep = pos_e < capacity
+        counts = counts + onehot.sum(1)
+        pos_oh = jax.nn.one_hot(pos_e, capacity, dtype=jnp.float32)
+        contrib = (onehot.astype(jnp.float32)[..., None]
+                   * pos_oh[..., None, :])                # [B, S, E, C]
+        contrib = contrib * keep[..., None, None]
+        dispatch = dispatch | (contrib > 0)
+        combine = combine + contrib * gate_vals[..., slot][..., None, None]
+
+    # --- expert computation (all-to-all over the expert axis under EP)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    hi = jnp.einsum("becd,edf->becf", xe, p["wi"],
+                    preferred_element_type=jnp.float32)
+    if mlp_variant in ("swiglu", "geglu"):
+        hg = jnp.einsum("becd,edf->becf", xe, p["wg"],
+                        preferred_element_type=jnp.float32)
+        act = (jax.nn.silu(hg) if mlp_variant == "swiglu"
+               else nn.gelu(hg)) * hi
+    else:
+        act = nn.gelu(hi)
+    ye = jnp.einsum("becf,efd->becd", act.astype(x.dtype), p["wo"],
+                    preferred_element_type=jnp.float32)
+    out = jnp.einsum("bsec,becd->bsd", combine, ye).astype(x.dtype)
+
+    # --- aux losses
+    # switch load-balance: E * sum_e (fraction tokens to e) * (mean prob e)
+    top1 = gate_idx[..., 0].reshape(-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), 0)
+    lb = E * jnp.sum(frac * probs.reshape(-1, E).mean(0))
+    z = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    aux = {"load_balance": lb, "router_z": z,
+           "expert_counts": counts.sum(0).astype(jnp.float32)}
+    return out, aux

@@ -1,0 +1,270 @@
+"""Pure-JAX neural-network substrate.
+
+No flax/haiku offline: parameters are plain pytrees (nested dicts of
+jnp arrays); every module is an (init, apply) pair of pure functions.
+Conventions:
+  * init(key, ...) -> params dict
+  * apply(params, x, ...) -> output (and possibly new state)
+  * images are NHWC, convolution weights HWIO (XLA native layouts)
+  * matmuls accumulate in f32 (`preferred_element_type`) so bf16 weights
+    are MXU-friendly on TPU while staying accurate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _fan_in_out(shape: Sequence[int]) -> Tuple[int, int]:
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    # conv kernels HWIO / HWOI: receptive field * channels
+    receptive = int(math.prod(shape[:-2]))
+    return shape[-2] * receptive, shape[-1] * receptive
+
+
+def glorot_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fan_in_out(shape)
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -limit, limit)
+
+
+def he_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fan_in_out(shape)
+    std = math.sqrt(2.0 / max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype)
+
+
+def normal_init(std: float = 0.02):
+    def init(key, shape, dtype=jnp.float32):
+        return jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype)
+    return init
+
+
+def truncated_normal(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * jnp.asarray(std, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / embedding
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+               dtype=jnp.float32, init=glorot_uniform) -> Params:
+    kw, _ = jax.random.split(key)
+    p = {"w": init(kw, (in_dim, out_dim), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = jnp.einsum("...i,io->...o", x, p["w"],
+                   preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.float32) -> Params:
+    return {"table": normal_init(1.0 / math.sqrt(dim))(key, (vocab, dim), dtype)}
+
+
+def embedding_apply(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def embedding_attend(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied output head: logits = x @ table.T"""
+    return jnp.einsum("...d,vd->...v", x, p["table"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# conv / conv-transpose (NHWC, HWIO)
+# ---------------------------------------------------------------------------
+
+def conv2d_init(key, in_ch: int, out_ch: int, kernel: int, *,
+                use_bias: bool = True, dtype=jnp.float32) -> Params:
+    p = {"w": he_normal(key, (kernel, kernel, in_ch, out_ch), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv2d_apply(p: Params, x: jnp.ndarray, *, stride: int = 1,
+                 padding: str = "SAME") -> jnp.ndarray:
+    y = lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def convT2d_init(key, in_ch: int, out_ch: int, kernel: int, *,
+                 use_bias: bool = True, dtype=jnp.float32) -> Params:
+    # transposed conv kernel stored HWIO with I=in, O=out
+    p = {"w": he_normal(key, (kernel, kernel, in_ch, out_ch), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def convT2d_apply(p: Params, x: jnp.ndarray, *, stride: int = 1,
+                  padding: str = "SAME") -> jnp.ndarray:
+    y = lax.conv_transpose(
+        x, p["w"].astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def conv1d_init(key, in_ch: int, out_ch: int, kernel: int, *,
+                use_bias: bool = True, dtype=jnp.float32) -> Params:
+    p = {"w": he_normal(key, (kernel, in_ch, out_ch), dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((out_ch,), dtype)
+    return p
+
+
+def conv1d_apply(p: Params, x: jnp.ndarray, *, stride: int = 1,
+                 padding: str = "SAME") -> jnp.ndarray:
+    """x: [B, T, C]"""
+    y = lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride,), padding,
+        dimension_numbers=("NTC", "TIO", "NTC"),
+        preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+def batchnorm_init(ch: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((ch,), dtype), "bias": jnp.zeros((ch,), dtype),
+            "mean": jnp.zeros((ch,), jnp.float32), "var": jnp.ones((ch,), jnp.float32)}
+
+
+def batchnorm_apply(p: Params, x: jnp.ndarray, *, train: bool,
+                    momentum: float = 0.9, eps: float = 1e-5
+                    ) -> Tuple[jnp.ndarray, Params]:
+    """Returns (y, updated_params). Reduces over all axes but the last."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x.astype(jnp.float32), axes)
+        var = jnp.var(x.astype(jnp.float32), axes)
+        new_p = dict(p)
+        new_p["mean"] = momentum * p["mean"] + (1 - momentum) * mean
+        new_p["var"] = momentum * p["var"] + (1 - momentum) * var
+    else:
+        mean, var = p["mean"], p["var"]
+        new_p = p
+    inv = lax.rsqrt(var + eps)
+    y = (x.astype(jnp.float32) - mean) * inv * p["scale"].astype(jnp.float32) \
+        + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype), new_p
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, *, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, *, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def geglu(x, gate):
+    return gelu(gate) * x
+
+
+def swiglu(x, gate):
+    return jax.nn.silu(gate) * x
+
+
+def leaky_relu(x, slope: float = 0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_size(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(x.size * x.dtype.itemsize) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree_util.tree_map(lambda x: x * s, tree)
+
+
+def tree_weighted_sum(stacked, weights):
+    """stacked: pytree with leading client axis K; weights: [K]."""
+    def agg(x):
+        w = weights.astype(jnp.float32)
+        return jnp.einsum("k,k...->...", w, x.astype(jnp.float32)).astype(x.dtype)
+    return jax.tree_util.tree_map(agg, stacked)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

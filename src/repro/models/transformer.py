@@ -1,0 +1,583 @@
+"""Config-composable transformer LM covering all assigned families.
+
+One block type per `ArchConfig.block_pattern` entry:
+  attn / local_attn  — GQA + RoPE (+ sliding window), chunked flash-style
+  rglru              — RecurrentGemma RG-LRU mixer
+  mlstm / slstm      — xLSTM blocks
+plus dense/MoE FFN, tied or untied vocab head, optional encoder-decoder
+(whisper) and modality-frontend prefix embeddings (VLM/audio stubs).
+
+Layers are grouped into super-blocks of `len(block_pattern)` and run
+under `lax.scan` with `jax.checkpoint` per super-block so the lowered
+HLO stays small for the 40-pair dry-run matrix and activation memory is
+one residual per block.
+
+Three entry points (lowered by launch/dryrun.py):
+  * train_step   — forward+backward+Adam on [B, S] token batches
+  * prefill      — build a KV/recurrent cache from [B, S] context
+  * decode_step  — ONE token against the cache (decode_* input shapes)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import nn
+from repro.models.attention import (apply_rope, attn_init, chunked_attention,
+                                    decode_attention, out_proj, qkv_proj)
+from repro.models.moe import moe_apply, moe_init
+from repro.models import recurrent as rec
+from repro.sharding.policy import maybe_shard
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# norms / mlp
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg: ArchConfig, dtype):
+    return (nn.layernorm_init(cfg.d_model, dtype) if cfg.norm == "layernorm"
+            else nn.rmsnorm_init(cfg.d_model, dtype))
+
+
+def _norm_apply(cfg: ArchConfig, p, x):
+    return (nn.layernorm_apply(p, x) if cfg.norm == "layernorm"
+            else nn.rmsnorm_apply(p, x))
+
+
+def mlp_init(key, cfg: ArchConfig, dtype) -> Params:
+    ki, kg, ko = jax.random.split(key, 3)
+    std = 1.0 / math.sqrt(cfg.d_model)
+    p = {"wi": nn.normal_init(std)(ki, (cfg.d_model, cfg.d_ff), dtype),
+         "wo": nn.normal_init(1.0 / math.sqrt(cfg.d_ff))(
+             ko, (cfg.d_ff, cfg.d_model), dtype)}
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        p["wg"] = nn.normal_init(std)(kg, (cfg.d_model, cfg.d_ff), dtype)
+    return p
+
+
+def mlp_apply(cfg: ArchConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    hi = jnp.einsum("bsd,df->bsf", x, p["wi"],
+                    preferred_element_type=jnp.float32)
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        hg = jnp.einsum("bsd,df->bsf", x, p["wg"],
+                        preferred_element_type=jnp.float32)
+        act = (jax.nn.silu(hg) if cfg.mlp_variant == "swiglu"
+               else nn.gelu(hg)) * hi
+    else:
+        act = nn.gelu(hi)
+    # NOTE: no f32 preferred type on the row-parallel (output) matmul —
+    # its cross-shard partial sums all-reduce in the operand dtype
+    # (bf16 on TPU halves the dominant collective; §Perf iteration 9).
+    out = jnp.einsum("bsf,fd->bsd", act.astype(x.dtype), p["wo"])
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, kind: str, *, cross: bool = False
+               ) -> Params:
+    dtype = cfg.dtype
+    keys = jax.random.split(key, 6)
+    p: Params = {"norm1": _norm_init(cfg, dtype)}
+    hd = cfg.resolved_head_dim
+    if kind in ("attn", "local_attn"):
+        p["attn"] = attn_init(keys[0], cfg.d_model, cfg.n_heads,
+                              cfg.n_kv_heads, hd, qkv_bias=cfg.qkv_bias,
+                              dtype=dtype)
+    elif kind == "rglru":
+        p["rglru"] = rec.rglru_init(keys[0], cfg.d_model,
+                                    cfg.d_rnn or cfg.d_model, dtype=dtype)
+    elif kind == "mlstm":
+        p["mlstm"] = rec.mlstm_init(keys[0], cfg.d_model, cfg.n_heads, hd,
+                                    dtype=dtype)
+    elif kind == "slstm":
+        p["slstm"] = rec.slstm_init(keys[0], cfg.d_model,
+                                    cfg.d_rnn or cfg.d_model, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = _norm_init(cfg, dtype)
+        p["xattn"] = attn_init(keys[1], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, hd, dtype=dtype)
+    if cfg.d_ff > 0:
+        p["norm2"] = _norm_init(cfg, dtype)
+        if cfg.n_experts:
+            p["moe"] = moe_init(keys[2], cfg.d_model, cfg.d_ff,
+                                cfg.n_experts, mlp_variant=cfg.mlp_variant,
+                                dtype=dtype)
+        else:
+            p["mlp"] = mlp_init(keys[2], cfg, dtype)
+    return p
+
+
+def _window_for(cfg: ArchConfig, kind: str,
+                force_window: Optional[int]) -> Optional[int]:
+    if force_window is not None:
+        return force_window
+    if kind == "local_attn":
+        return cfg.local_window
+    return cfg.sliding_window
+
+
+def block_seq(cfg: ArchConfig, kind: str, p: Params, x: jnp.ndarray,
+              positions: jnp.ndarray, *, causal: bool = True,
+              enc_out: Optional[jnp.ndarray] = None,
+              force_window: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward. Returns (x, moe_aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(cfg, p["norm1"], x)
+    h = maybe_shard(h, "resid_inner")
+    if kind in ("attn", "local_attn"):
+        q, k, v = qkv_proj(p["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_attention(q, k, v, window=_window_for(cfg, kind,
+                                                          force_window),
+                              causal=causal)
+        x = x + out_proj(p["attn"], o)
+    elif kind == "rglru":
+        o, _ = rec.rglru_seq(p["rglru"], h)
+        x = x + o
+    elif kind == "mlstm":
+        o, _ = rec.mlstm_seq(p["mlstm"], h)
+        x = x + o
+    elif kind == "slstm":
+        o, _ = rec.slstm_seq(p["slstm"], h)
+        x = x + o
+    if enc_out is not None and "xattn" in p:
+        hx = _norm_apply(cfg, p["norm_x"], x)
+        q, _, _ = qkv_proj(p["xattn"], hx)
+        _, k, v = qkv_proj(p["xattn"], enc_out)
+        o = chunked_attention(q, k, v, causal=False)
+        x = x + out_proj(p["xattn"], o)
+    if cfg.d_ff > 0:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        h2 = maybe_shard(h2, "resid_inner")
+        if cfg.n_experts:
+            o, moe_aux = moe_apply(p["moe"], h2, top_k=cfg.moe_top_k,
+                                   capacity_factor=cfg.capacity_factor,
+                                   mlp_variant=cfg.mlp_variant)
+            aux = aux + moe_aux["load_balance"] + 1e-3 * moe_aux["router_z"]
+        else:
+            o = mlp_apply(cfg, p["mlp"], h2)
+        x = x + o
+    x = maybe_shard(x, "resid")
+    return x, aux
+
+
+# --- cache handling --------------------------------------------------------
+
+def _attn_cache_len(cfg: ArchConfig, kind: str, ctx_len: int,
+                    margin: int, force_window: Optional[int]) -> int:
+    w = _window_for(cfg, kind, force_window)
+    if w is not None:
+        return min(ctx_len + margin, w)
+    return ctx_len + margin
+
+
+def init_cache_entry(cfg: ArchConfig, kind: str, batch: int, ctx_len: int,
+                     *, margin: int = 16,
+                     force_window: Optional[int] = None) -> Params:
+    hd = cfg.resolved_head_dim
+    dt = cfg.dtype
+    if kind in ("attn", "local_attn"):
+        s = _attn_cache_len(cfg, kind, ctx_len, margin, force_window)
+        return {"k": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dt),
+                "v": jnp.zeros((batch, s, cfg.n_kv_heads, hd), dt)}
+    if kind == "rglru":
+        return {"h": jnp.zeros((batch, cfg.d_rnn or cfg.d_model), jnp.float32)}
+    if kind == "mlstm":
+        return {"C": jnp.zeros((batch, cfg.n_heads, hd, hd), jnp.float32),
+                "n": jnp.zeros((batch, cfg.n_heads, hd), jnp.float32)}
+    if kind == "slstm":
+        return {"c": jnp.zeros((batch, cfg.d_rnn or cfg.d_model), jnp.float32),
+                "n": jnp.zeros((batch, cfg.d_rnn or cfg.d_model), jnp.float32),
+                "m": jnp.full((batch, cfg.d_rnn or cfg.d_model), -1e30,
+                              jnp.float32)}
+    raise ValueError(kind)
+
+
+def block_prefill(cfg: ArchConfig, kind: str, p: Params, x: jnp.ndarray,
+                  positions: jnp.ndarray, ctx_len: int, *,
+                  enc_out: Optional[jnp.ndarray] = None, margin: int = 16,
+                  force_window: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, Params]:
+    """Forward + produce the block's cache entry."""
+    B, S = x.shape[0], x.shape[1]
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        q, k, v = qkv_proj(p["attn"], h)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = chunked_attention(q, k, v,
+                              window=_window_for(cfg, kind, force_window))
+        x = x + out_proj(p["attn"], o)
+        s_cache = _attn_cache_len(cfg, kind, ctx_len, margin, force_window)
+        keep = min(S, s_cache)
+        entry = init_cache_entry(cfg, kind, B, ctx_len, margin=margin,
+                                 force_window=force_window)
+        k_keep = k[:, S - keep:].astype(entry["k"].dtype)
+        v_keep = v[:, S - keep:].astype(entry["v"].dtype)
+        if keep == s_cache and S % s_cache != 0:
+            # ring discipline: token t lives at slot t % s_cache, so the
+            # kept window [S-keep, S) starts at slot (S-keep) % s_cache
+            shift = (S - keep) % s_cache
+            k_keep = jnp.roll(k_keep, shift, axis=1)
+            v_keep = jnp.roll(v_keep, shift, axis=1)
+        entry["k"] = lax.dynamic_update_slice(entry["k"], k_keep, (0, 0, 0, 0))
+        entry["v"] = lax.dynamic_update_slice(entry["v"], v_keep, (0, 0, 0, 0))
+    elif kind == "rglru":
+        o, hstate = rec.rglru_seq(p["rglru"], h)
+        x = x + o
+        entry = {"h": hstate}
+    elif kind == "mlstm":
+        o, st = rec.mlstm_seq(p["mlstm"], h)
+        x = x + o
+        entry = st
+    elif kind == "slstm":
+        o, st = rec.slstm_seq(p["slstm"], h)
+        x = x + o
+        entry = st
+    if enc_out is not None and "xattn" in p:
+        hx = _norm_apply(cfg, p["norm_x"], x)
+        q, _, _ = qkv_proj(p["xattn"], hx)
+        _, kx, vx = qkv_proj(p["xattn"], enc_out)
+        o = chunked_attention(q, kx, vx, causal=False)
+        x = x + out_proj(p["xattn"], o)
+        entry["xk"] = kx.astype(cfg.dtype)
+        entry["xv"] = vx.astype(cfg.dtype)
+    if cfg.d_ff > 0:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            o, _ = moe_apply(p["moe"], h2, top_k=cfg.moe_top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             mlp_variant=cfg.mlp_variant)
+        else:
+            o = mlp_apply(cfg, p["mlp"], h2)
+        x = x + o
+    x = maybe_shard(x, "resid")
+    entry = {k_: maybe_shard(v_, "cache") if v_.ndim == 4 else v_
+             for k_, v_ in entry.items()}
+    return x, entry
+
+
+def block_decode(cfg: ArchConfig, kind: str, p: Params, x: jnp.ndarray,
+                 entry: Params, length: jnp.ndarray, *,
+                 force_window: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """One-token step. x [B,1,D]; `length` tokens already in cache."""
+    new_entry = dict(entry)
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        q, k, v = qkv_proj(p["attn"], h)
+        q = apply_rope(q, length[None] if length.ndim == 0 else length,
+                       cfg.rope_theta)
+        k = apply_rope(k, length[None] if length.ndim == 0 else length,
+                       cfg.rope_theta)
+        s_max = entry["k"].shape[1]
+        idx = length % s_max
+        kc = lax.dynamic_update_slice(entry["k"], k.astype(entry["k"].dtype),
+                                      (0, idx, 0, 0))
+        vc = lax.dynamic_update_slice(entry["v"], v.astype(entry["v"].dtype),
+                                      (0, idx, 0, 0))
+        new_entry["k"], new_entry["v"] = kc, vc
+        valid = jnp.minimum(length + 1, s_max)
+        o = decode_attention(q, kc, vc, valid)
+        x = x + out_proj(p["attn"], o)
+    elif kind == "rglru":
+        o, hs = rec.rglru_step(p["rglru"], h, entry["h"])
+        x = x + o
+        new_entry["h"] = hs
+    elif kind == "mlstm":
+        o, st = rec.mlstm_step(p["mlstm"], h, {"C": entry["C"],
+                                               "n": entry["n"]})
+        x = x + o
+        new_entry.update(st)
+    elif kind == "slstm":
+        o, st = rec.slstm_step(p["slstm"], h, {"c": entry["c"],
+                                               "n": entry["n"],
+                                               "m": entry["m"]})
+        x = x + o
+        new_entry.update(st)
+    if "xk" in entry and "xattn" in p:
+        hx = _norm_apply(cfg, p["norm_x"], x)
+        q, _, _ = qkv_proj(p["xattn"], hx)
+        enc_len = jnp.asarray(entry["xk"].shape[1], jnp.int32)
+        o = decode_attention(q, entry["xk"], entry["xv"], enc_len)
+        x = x + out_proj(p["xattn"], o)
+    if cfg.d_ff > 0:
+        h2 = _norm_apply(cfg, p["norm2"], x)
+        if cfg.n_experts:
+            o, _ = moe_apply(p["moe"], h2, top_k=cfg.moe_top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             mlp_variant=cfg.mlp_variant)
+        else:
+            o = mlp_apply(cfg, p["mlp"], h2)
+        x = x + o
+    return x, new_entry
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def _pattern_split(cfg: ArchConfig) -> Tuple[int, Tuple[str, ...]]:
+    pat = cfg.block_pattern
+    n_super = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_super * len(pat)
+    rest = tuple(pat[i] for i in range(rem))
+    return n_super, rest
+
+
+def init_lm(key, cfg: ArchConfig) -> Params:
+    dtype = cfg.dtype
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": nn.embedding_init(keys[0], cfg.vocab, cfg.d_model,
+                                   dtype=dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    cross = cfg.is_encoder_decoder
+    n_super, rest = _pattern_split(cfg)
+    blocks = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        sub = jax.random.split(keys[1], n_super * (j + 1))[-n_super:]
+        blocks[f"p{j}_{kind}"] = jax.vmap(
+            lambda kk: init_block(kk, cfg, kind, cross=cross))(sub)
+    params["blocks"] = blocks
+    params["rest"] = {
+        f"r{i}_{kind}": init_block(jax.random.fold_in(keys[2], i), cfg, kind,
+                                   cross=cross)
+        for i, kind in enumerate(rest)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.dense_init(keys[3], cfg.d_model, cfg.vocab,
+                                          use_bias=False, dtype=dtype)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(keys[4], cfg.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda kk: init_block(kk, cfg, "attn"))(enc_keys)
+        params["enc_norm"] = _norm_init(cfg, dtype)
+    return params
+
+
+def _embed(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+           prefix_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    x = nn.embedding_apply(params["embed"], tokens).astype(cfg.dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    return maybe_shard(x, "resid")
+
+
+def _logits(cfg: ArchConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = nn.embedding_attend(params["embed"], x)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"]["w"],
+                            preferred_element_type=jnp.float32)
+    return maybe_shard(logits, "logits")
+
+
+def _encoder(cfg: ArchConfig, params: Params,
+             frames: jnp.ndarray, unroll: int = 1) -> jnp.ndarray:
+    """Whisper encoder over stubbed frame embeddings [B, S_enc, D]."""
+    x = frames.astype(cfg.dtype)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        x, _ = block_seq(cfg, "attn", p, x, pos, causal=False)
+        return x, None
+
+    body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["enc_blocks"], unroll=unroll)
+    return _norm_apply(cfg, params["enc_norm"], x)
+
+
+def forward_train(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+                  prefix_embeds: Optional[jnp.ndarray] = None,
+                  enc_frames: Optional[jnp.ndarray] = None,
+                  force_window: Optional[int] = None,
+                  unroll: int = 1
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B, S_total, V], moe_aux)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder(cfg, params, enc_frames, unroll=unroll)
+    x = _embed(cfg, params, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    pattern = cfg.block_pattern
+
+    def superblock(x, slice_p):
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(pattern):
+            x, a = block_seq(cfg, kind, slice_p[f"p{j}_{kind}"], x, positions,
+                             enc_out=enc_out, force_window=force_window)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, slice_p):
+        x, aux = carry
+        x, a = jax.checkpoint(superblock)(x, slice_p)
+        return (x, aux + a), None
+
+    (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                           params["blocks"], unroll=unroll)
+    n_super, rest = _pattern_split(cfg)
+    for i, kind in enumerate(rest):
+        x, a = block_seq(cfg, kind, params["rest"][f"r{i}_{kind}"], x,
+                         positions, enc_out=enc_out,
+                         force_window=force_window)
+        aux = aux + a
+    return _logits(cfg, params, x), aux
+
+
+def lm_loss(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            force_window: Optional[int] = None,
+            unroll: int = 1) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward_train(
+        cfg, params, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        force_window=force_window, unroll=unroll)
+    labels = batch["labels"]
+    # align: labels cover the *text* region (suffix) only
+    S_lab = labels.shape[1]
+    logits_txt = logits[:, -S_lab:]
+    logp = jax.nn.log_softmax(logits_txt.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        loss = jnp.mean(nll)
+    else:
+        loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + 1e-2 * aux
+    return total, {"nll": loss, "moe_aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, optimizer,
+                    force_window: Optional[int] = None, unroll: int = 1):
+    opt_init, opt_update = optimizer
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, batch, force_window, unroll), has_aux=True
+        )(params)
+        opt_state, params = opt_update(opt_state, grads, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step, opt_init
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, ctx_len: int, *,
+               margin: int = 16, force_window: Optional[int] = None) -> Params:
+    n_super, rest = _pattern_split(cfg)
+    scanned = {}
+    for j, kind in enumerate(cfg.block_pattern):
+        one = init_cache_entry(cfg, kind, batch, ctx_len, margin=margin,
+                               force_window=force_window)
+        scanned[f"p{j}_{kind}"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape), one)
+        if cfg.is_encoder_decoder:
+            hd = cfg.resolved_head_dim
+            xkv = jnp.zeros((n_super, batch, cfg.num_prefix_embeds,
+                             cfg.n_kv_heads, hd), cfg.dtype)
+            scanned[f"p{j}_{kind}"]["xk"] = xkv
+            scanned[f"p{j}_{kind}"]["xv"] = xkv
+    rest_cache = {}
+    for i, kind in enumerate(rest):
+        rest_cache[f"r{i}_{kind}"] = init_cache_entry(
+            cfg, kind, batch, ctx_len, margin=margin,
+            force_window=force_window)
+    return {"scanned": scanned, "rest": rest_cache,
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            enc_frames: Optional[jnp.ndarray] = None, *,
+            margin: int = 16, force_window: Optional[int] = None,
+            unroll: int = 1) -> Tuple[jnp.ndarray, Params]:
+    """Returns (last-position logits [B, V], cache)."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder(cfg, params, enc_frames, unroll=unroll)
+    x = _embed(cfg, params, tokens, prefix_embeds)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    pattern = cfg.block_pattern
+
+    def body(x, slice_p):
+        entries = {}
+        for j, kind in enumerate(pattern):
+            x, e = block_prefill(cfg, kind, slice_p[f"p{j}_{kind}"], x,
+                                 positions, S, enc_out=enc_out,
+                                 margin=margin, force_window=force_window)
+            entries[f"p{j}_{kind}"] = e
+        return x, entries
+
+    x, scanned = lax.scan(body, x, params["blocks"], unroll=unroll)
+    n_super, rest = _pattern_split(cfg)
+    rest_cache = {}
+    for i, kind in enumerate(rest):
+        x, e = block_prefill(cfg, kind, params["rest"][f"r{i}_{kind}"], x,
+                             positions, S, enc_out=enc_out, margin=margin,
+                             force_window=force_window)
+        rest_cache[f"r{i}_{kind}"] = e
+    logits = _logits(cfg, params, x[:, -1:])
+    cache = {"scanned": scanned, "rest": rest_cache,
+             "length": jnp.asarray(S, jnp.int32)}
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                cache: Params, *, force_window: Optional[int] = None,
+                unroll: int = 1) -> Tuple[jnp.ndarray, Params]:
+    """token [B] or [B,1] -> (logits [B, V], new cache). ONE new token."""
+    if token.ndim == 1:
+        token = token[:, None]
+    x = nn.embedding_apply(params["embed"], token).astype(cfg.dtype)
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+    length = cache["length"]
+    pattern = cfg.block_pattern
+
+    def body(x, inp):
+        slice_p, slice_c = inp
+        new_c = {}
+        for j, kind in enumerate(pattern):
+            x, e = block_decode(cfg, kind, slice_p[f"p{j}_{kind}"], x,
+                                slice_c[f"p{j}_{kind}"], length,
+                                force_window=force_window)
+            new_c[f"p{j}_{kind}"] = e
+        return x, new_c
+
+    x, new_scanned = lax.scan(body, x, (params["blocks"], cache["scanned"]),
+                              unroll=unroll)
+    n_super, rest = _pattern_split(cfg)
+    new_rest = {}
+    for i, kind in enumerate(rest):
+        x, e = block_decode(cfg, kind, params["rest"][f"r{i}_{kind}"], x,
+                            cache["rest"][f"r{i}_{kind}"], length,
+                            force_window=force_window)
+        new_rest[f"r{i}_{kind}"] = e
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], {"scanned": new_scanned, "rest": new_rest,
+                          "length": length + 1}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import adam, sgd, AdamState, SGDState
+from repro.optim.schedules import constant, warmup_cosine, linear_decay
+
+__all__ = ["adam", "sgd", "AdamState", "SGDState", "constant",
+           "warmup_cosine", "linear_decay"]

@@ -1,0 +1,91 @@
+"""Minimal optimizer library (optax is not available offline).
+
+Optimizers are (init, update) pairs operating on parameter pytrees.
+`update(state, grads, params) -> (new_state, new_params)`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: Optional[float] = None):
+    """lr is a float or a callable step -> lr."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), zeros,
+                         jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def update(state: AdamState, grads, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = nn.global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gn + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return AdamState(step, mu, nu), new_params
+
+    return init, update
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    momentum: Any
+
+
+def sgd(lr, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mom = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(state: SGDState, grads, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            eff = mom
+        else:
+            mom = state.momentum
+            eff = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g).astype(p.dtype),
+            params, eff)
+        return SGDState(step, mom), new_params
+
+    return init, update

@@ -1,0 +1,213 @@
+"""Sharding policy: per-parameter PartitionSpecs + activation specs.
+
+Rules are name-based with divisibility-aware fallback: each parameter
+kind lists candidate (dim -> mesh axis) placements; an axis is dropped
+when it does not evenly divide the dim (e.g. mixtral's 8 experts on a
+16-way model axis fall back to TP over d_ff).
+
+Axes:
+  * `data` (+ outer `pod` when present) — batch / FSDP axis
+  * `model` — tensor-parallel axis
+
+FSDP: when enabled, the non-TP dim of every large matrix additionally
+shards over `data`, ZeRO-3 style; XLA GSPMD inserts the per-layer
+all-gathers (under `lax.scan` these amortize into one gather per block).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = True
+    seq_parallel: bool = True       # shard seq over model axis between blocks
+    shard_cache_seq: bool = True    # decode KV cache seq axis over model
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sanitize(mesh, shape: Sequence[int], spec: Sequence) -> P:
+    """Drop axes that don't divide their dim or don't exist in the mesh."""
+    out = []
+    names = set(mesh.axis_names)
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        axes = tuple(a for a in axes if a in names)
+        size = int(np.prod([dict(mesh.shape)[a] for a in axes])) if axes else 1
+        if axes and dim % size == 0 and size > 1:
+            out.append(axes[0] if len(axes) == 1 else axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# parameter-name -> trailing-dims spec (DP = fsdp data axes, MP = model)
+# entries use 'DP' / 'MP' placeholders resolved against the mesh.
+_PARAM_RULES: Dict[str, Tuple] = {
+    # attention projections [D, N, hd] / [N, hd, D]
+    "wq": ("DP", "MP", None), "wk": ("DP", "MP", None),
+    "wv": ("DP", "MP", None), "w_o": ("DP", "MP", None),
+    "wo3": ("MP", None, "DP"),           # attn out  [N, hd, D]
+    # dense mlp [D, F] / [F, D]
+    "wi2": ("DP", "MP"), "wg2": ("DP", "MP"), "wo2": ("MP", "DP"),
+    # moe [E, D, F] / [E, F, D] — expert-parallel preferred, TP fallback
+    "wi3": ("MP", "DP", None), "wg3": ("MP", "DP", None),
+    "woe": ("MP", None, "DP"),
+    "router": (None, None),
+    # embeddings [V, D]
+    "table": ("MP", "DP"),
+    # rg-lru
+    "w_in": ("DP", "MP"), "w_gate_x": ("DP", "MP"),
+    "w_rec_gate": ("MP", None), "w_in_gate": ("MP", None),
+    "lambda": ("MP",), "w_out": ("MP", "DP"),
+    # slstm
+    "w_z": ("DP", "MP"), "w_i": ("DP", "MP"), "w_f": ("DP", "MP"),
+    # mlstm gates [D, N, 2]
+    "w_if": ("DP", None, None),
+    # generic dense (whisper biases / gan fc)
+    "w": ("DP", "MP"), "b": (None,),
+    # norms / bn
+    "scale": (None,), "bias": (None,), "mean": (None,), "var": (None,),
+    # conv kernels (gan): replicated
+    "convw": (None, None, None, None),
+}
+
+
+def param_spec(mesh, policy: ShardingPolicy, path: str,
+               shape: Sequence[int]) -> P:
+    """path: '/'-joined key path; shape: full leaf shape (may include
+    leading scan-layer and/or client axes, padded with None)."""
+    name = path.split("/")[-1]
+    ndim = len(shape)
+    # moe weights are [E, D, F]/[E, F, D]; attn wo is [N, hd, D]; dense
+    # mlp wi/wo are rank 2 — disambiguate via the path.
+    model_size = dict(mesh.shape).get("model", 1)
+    if name in ("wi", "wg", "wo") and "moe" in path:
+        n_experts = shape[-3]
+        ep = n_experts % model_size == 0   # expert-parallel feasible?
+        if name in ("wi", "wg"):           # [E, D, F]
+            rule = ("MP", "DP", None) if ep else (None, "DP", "MP")
+        else:                              # wo [E, F, D]
+            rule = ("MP", None, "DP") if ep else (None, "MP", "DP")
+    elif name in ("wi", "wg"):
+        rule = _PARAM_RULES["wi2"]
+    elif name == "wo" and "attn" in path:
+        rule = _PARAM_RULES["wo3"]
+    elif name == "wo":
+        rule = _PARAM_RULES["wo2"]
+    else:
+        rule = _PARAM_RULES.get(name)
+    if rule is None:
+        return P()
+    rule = tuple(rule)
+    # pad leading dims (scan layer axis, stacked client axis) with None
+    if len(rule) > ndim:
+        return P()
+    full = (None,) * (ndim - len(rule)) + rule
+    dp = data_axes(mesh) if policy.fsdp else ()
+    resolved = []
+    for ax in full:
+        if ax == "DP":
+            resolved.append(dp if len(dp) != 1 else dp[0]) if dp else \
+                resolved.append(None)
+        elif ax == "MP":
+            resolved.append("model" if "model" in mesh.axis_names else None)
+        else:
+            resolved.append(ax)
+    return sanitize(mesh, shape, resolved)
+
+
+def tree_param_specs(mesh, policy: ShardingPolicy, params) -> Any:
+    """PartitionSpec pytree matching `params`."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = "/".join(_key_name(k) for k in path)
+        specs.append(param_spec(mesh, policy, pstr, np.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(mesh, policy: ShardingPolicy, params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_param_specs(mesh, policy, params),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# activation specs (used via with_sharding_constraint inside the model)
+# ---------------------------------------------------------------------------
+
+def act_spec(mesh, policy: ShardingPolicy, kind: str) -> P:
+    dp = data_axes(mesh)
+    dpa = dp if len(dp) != 1 else dp[0]
+    mp = "model" if "model" in mesh.axis_names else None
+    if kind == "resid":     # [B, S, D] between blocks
+        return P(dpa, mp if policy.seq_parallel else None, None)
+    if kind == "resid_inner":
+        # [B, S, D] entering attention/ffn: seq gathered, D *replicated*
+        # within the model group (Megatron column/row-parallel semantics;
+        # constraining D over model here conflicts with the (DP, MP)
+        # weight sharding and forces f32 hidden-state gathers — see
+        # EXPERIMENTS.md §Perf iteration 8).
+        return P(dpa, None, None)
+    if kind == "tokens":    # [B, S]
+        return P(dpa, None)
+    if kind == "cache":     # [B, S, KV, hd]
+        return P(dpa, mp if policy.shard_cache_seq else None, None, None)
+    if kind == "state":     # [B, R...]
+        return P(dpa)
+    if kind == "logits":    # [B, S, V]
+        return P(dpa, None, mp)
+    if kind == "rows":      # [N_rows, ...] population-batch tensors
+        return P(dpa)
+    return P()
+
+
+_MESH_STACK: list = []
+
+
+class activation_sharding:
+    """Context manager installing (mesh, policy) for maybe_shard()."""
+
+    def __init__(self, mesh: Optional[Mesh], policy: ShardingPolicy):
+        self.pair = (mesh, policy)
+
+    def __enter__(self):
+        _MESH_STACK.append(self.pair)
+        return self
+
+    def __exit__(self, *exc):
+        _MESH_STACK.pop()
+        return False
+
+
+def maybe_shard(x, kind: str):
+    if not _MESH_STACK:
+        return x
+    mesh, policy = _MESH_STACK[-1]
+    if mesh is None:
+        return x
+    spec = act_spec(mesh, policy, kind)
+    spec = sanitize(mesh, x.shape, tuple(spec) + (None,) * (x.ndim - len(spec)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,216 @@
+"""Properties of the paper's core machinery: latency model, GA,
+clustering, KLD weighting, federation (hypothesis where natural)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency import (Cut, PAPER_DEVICES, PAPER_SERVER,
+                                all_cut_options, fedgan_iteration_latency,
+                                fedsplitgan_iteration_latency,
+                                hflgan_iteration_latency,
+                                huscf_iteration_latency,
+                                mdgan_iteration_latency, valid_cuts)
+from repro.core.genetic import GAConfig, optimize_cuts
+from repro.core.clustering import cluster_activations, kmeans, silhouette
+from repro.core import kld as kldm
+from repro.core.splitting import group_by_profile
+from repro.core.federation import federate_client_params
+
+
+# --- latency model -----------------------------------------------------------
+
+def test_cut_options_respect_middle_layer():
+    for gh, gt in valid_cuts(5):
+        assert 1 <= gh <= 2 and 3 <= gt <= 4  # middle layer 2 on server
+
+
+def test_latency_positive_and_batch_monotone():
+    devices = list(PAPER_DEVICES)
+    cuts = [Cut(1, 3, 1, 3)] * len(devices)
+    l32 = huscf_iteration_latency(cuts, devices, batch=32)
+    l64 = huscf_iteration_latency(cuts, devices, batch=64)
+    assert 0 < l32 < l64
+
+
+def test_paper_table15_ordering():
+    """Table 15: HuSCF ~ Fed-Split << MD-GAN << FedGAN < PFL < HFL."""
+    devices = [PAPER_DEVICES[i % 7] for i in range(100)]
+    res = optimize_cuts(devices, batch=64,
+                        config=GAConfig(population_size=60, generations=15,
+                                        seed=0))
+    huscf = res.latency
+    fed = fedgan_iteration_latency(devices, 64)
+    md = mdgan_iteration_latency(devices, batch=64)
+    hfl = hflgan_iteration_latency(devices, 64)
+    fsg = fedsplitgan_iteration_latency(devices, batch=64)
+    assert huscf < md < fed < hfl
+    assert huscf < fsg * 2.5            # comparable to Fed-Split GANs
+    assert fed / huscf > 5              # paper: >= 5x reduction
+    # absolute scale: paper reports 7.8s (ours ~8.5 with our FLOP counts)
+    assert 2.0 < huscf < 20.0
+
+
+@given(st.integers(0, len(all_cut_options()) - 1),
+       st.integers(2, 16))
+@settings(max_examples=20, deadline=None)
+def test_latency_worse_when_slower_devices(opt_idx, k):
+    opts = all_cut_options()
+    cuts = [opts[opt_idx]] * k
+    fast = [PAPER_DEVICES[2]] * k  # device3: strongest
+    slow = [PAPER_DEVICES[0]] * k  # device1: weakest
+    assert huscf_iteration_latency(cuts, slow) >= \
+        huscf_iteration_latency(cuts, fast)
+
+
+# --- genetic algorithm -------------------------------------------------------
+
+def test_ga_beats_naive_cuts():
+    devices = [PAPER_DEVICES[i % 7] for i in range(20)]
+    naive = huscf_iteration_latency([Cut(1, 3, 1, 3)] * 20, devices, batch=64)
+    res = optimize_cuts(devices, batch=64,
+                        config=GAConfig(population_size=50, generations=12,
+                                        seed=1))
+    assert res.latency <= naive
+
+
+def test_ga_profile_reduction_matches_client_based():
+    """Appendix D: profile-based GA reaches the same optimum, faster."""
+    devices = [PAPER_DEVICES[i % 3] for i in range(12)]
+    prof = optimize_cuts(devices, batch=64,
+                         config=GAConfig(population_size=80, generations=20,
+                                         profile_based=True, seed=0))
+    client = optimize_cuts(devices, batch=64,
+                           config=GAConfig(population_size=80, generations=20,
+                                           profile_based=False, seed=0))
+    assert prof.latency <= client.latency * 1.05
+
+
+# --- clustering / KLD --------------------------------------------------------
+
+def test_kmeans_separates_two_blobs():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.2, (10, 8)) + 3
+    b = rng.normal(0, 0.2, (12, 8)) - 3
+    x = np.vstack([a, b])
+    labels, centers, _ = kmeans(x, 2, seed=0)
+    assert len(set(labels[:10])) == 1 and len(set(labels[10:])) == 1
+    assert labels[0] != labels[-1]
+
+
+def test_cluster_activation_k_selection():
+    rng = np.random.default_rng(1)
+    x = np.vstack([rng.normal(0, 0.3, (8, 16)) + off
+                   for off in (-6, 0, 6)])
+    res = cluster_activations(x, seed=0)
+    assert res.k == 3
+
+
+def test_cluster_single_domain_falls_back_to_one():
+    """Unstructured activations: silhouette below threshold -> k=1.
+    (Small-sample silhouette of pure noise sits ~0.2, hence the
+    explicit threshold; the default 0.15 is tuned for the GAN's
+    6272-dim mid-layer activations where noise scores lower.)"""
+    rng = np.random.default_rng(2)
+    x = rng.normal(0, 1.0, (12, 16))
+    res = cluster_activations(x, seed=0, min_silhouette=0.3)
+    assert res.k == 1
+    forced = cluster_activations(x, k=2, seed=0)
+    assert forced.k == 2  # explicit k always honored
+
+
+@given(st.integers(2, 12), st.integers(1, 4))
+@settings(max_examples=25, deadline=None)
+def test_federation_weights_sum_to_one_per_cluster(k_clients, n_clusters):
+    rng = np.random.default_rng(k_clients * 7 + n_clusters)
+    acts = rng.normal(0, 1, (k_clients, 10))
+    labels = rng.integers(0, n_clusters, k_clients)
+    sizes = rng.integers(50, 700, k_clients)
+    w, klds = kldm.activation_weights(acts, sizes, labels)
+    assert np.all(w >= 0) and np.all(np.isfinite(w))
+    for c in np.unique(labels):
+        np.testing.assert_allclose(w[labels == c].sum(), 1.0, atol=1e-9)
+    assert np.all(klds >= -1e-9)
+
+
+def test_kld_zero_for_identical_distributions():
+    p = np.ones(10) / 10
+    assert kldm.kl_divergence(p, p) == pytest.approx(0.0, abs=1e-12)
+
+
+def test_weight_decreases_with_divergence():
+    """Eq. 15: same size, higher KLD -> lower weight."""
+    acts = np.array([[5.0, 0, 0, 0], [5.0, 0, 0, 0], [0, 5.0, 0, 0]])
+    sizes = np.array([100, 100, 100])
+    labels = np.zeros(3, np.int64)
+    w, klds = kldm.activation_weights(acts, sizes, labels, beta=5.0)
+    assert klds[2] > klds[0]
+    assert w[2] < w[0]
+
+
+def test_label_vs_activation_kld_same_interface():
+    hists = np.array([[10, 0, 5], [8, 2, 5], [0, 10, 5]])
+    sizes = np.array([15, 15, 15])
+    labels = np.zeros(3, np.int64)
+    w, _ = kldm.label_weights(hists, sizes, labels)
+    np.testing.assert_allclose(w.sum(), 1.0)
+
+
+# --- layer-wise clustered federation ----------------------------------------
+
+def _tiny_population():
+    from repro.core.latency import Cut, DeviceProfile
+    devs = [PAPER_DEVICES[0]] * 2 + [PAPER_DEVICES[1]] * 2
+    cuts = [Cut(1, 3, 1, 3)] * 2 + [Cut(2, 4, 2, 4)] * 2
+    groups = group_by_profile(devs, cuts)
+    return groups
+
+
+def test_federation_layerwise_ownership_and_convexity():
+    groups = _tiny_population()
+    # client params: net G, layers per cut; leaf = scalar marker per client
+    client_params = {}
+    val = 0.0
+    for g in groups:
+        layers = {}
+        owned = list(range(g.cut.g_h)) + list(range(g.cut.g_t, 5))
+        for l in owned:
+            layers[str(l)] = {"w": jnp.arange(g.size, dtype=jnp.float32)
+                              + val}
+            val += 10
+        client_params[g.name] = {"G": layers}
+    weights = np.full(4, 0.25)
+    labels = np.zeros(4, np.int64)
+    out = federate_client_params(groups, client_params, weights, labels,
+                                 n_layers={"G": 5})
+    # layer 0 owned by all 4 clients -> every copy equals the global mean
+    vals = []
+    for g in groups:
+        vals.append(np.asarray(out[g.name]["G"]["0"]["w"]))
+    flat_in = np.concatenate([np.asarray(client_params[g.name]["G"]["0"]["w"])
+                              for g in groups])
+    expected = flat_in.mean()
+    for v in vals:
+        np.testing.assert_allclose(v, expected, rtol=1e-6)
+    # within-cluster convexity: aggregate lies in [min, max] of inputs
+    assert flat_in.min() - 1e-5 <= expected <= flat_in.max() + 1e-5
+
+
+def test_federation_respects_clusters():
+    groups = _tiny_population()
+    client_params = {}
+    for gi, g in enumerate(groups):
+        layers = {}
+        owned = list(range(g.cut.g_h)) + list(range(g.cut.g_t, 5))
+        for l in owned:
+            layers[str(l)] = {"w": jnp.full((g.size, 2), float(gi))}
+        client_params[g.name] = {"G": layers}
+    # two clusters split along groups
+    labels = np.array([0, 0, 1, 1])
+    weights = np.array([0.5, 0.5, 0.5, 0.5])
+    out = federate_client_params(groups, client_params, weights, labels,
+                                 n_layers={"G": 5})
+    g0, g1 = groups
+    np.testing.assert_allclose(np.asarray(out[g0.name]["G"]["0"]["w"]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[g1.name]["G"]["0"]["w"]), 1.0)

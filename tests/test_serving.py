@@ -1,0 +1,97 @@
+"""Serving-path integration: prefill + decode_step must reproduce the
+training forward's next-token logits for every architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import transformer as T
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_train_forward(arch):
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        # capacity-based token dropping makes train-time MoE outputs
+        # differ from decode; compare with undropped capacity instead
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S = 2, 33
+    kwargs = {}
+    if cfg.is_encoder_decoder:
+        S = 17
+        kwargs["enc_frames"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.num_prefix_embeds, cfg.d_model)),
+            dtype=jnp.float32)
+    elif cfg.frontend == "vision":
+        kwargs["prefix_embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.num_prefix_embeds, cfg.d_model)),
+            dtype=jnp.float32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), dtype=jnp.int32)
+
+    logits_full, _ = T.forward_train(cfg, params, toks, **kwargs)
+    _, cache = T.prefill(cfg, params, toks[:, :S - 1], **kwargs)
+    ld, cache2 = T.decode_step(cfg, params, toks[:, S - 1], cache)
+    want = np.asarray(logits_full[:, -1], np.float32)
+    got = np.asarray(ld, np.float32)
+    scale = np.abs(want).max() + 1e-6
+    assert np.abs(got - want).max() / scale < 5e-3
+    # cache length counts prefix embeddings (VLM) as context positions
+    expected_len = S + (cfg.num_prefix_embeds if cfg.frontend == "vision"
+                        else 0)
+    assert int(cache2["length"]) == expected_len
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "recurrentgemma-2b",
+                                  "xlstm-350m"])
+def test_multi_token_greedy_decode_consistency(arch):
+    """Greedy decode of 4 tokens == argmax of teacher-forced forward."""
+    import dataclasses
+    cfg = get_smoke_config(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params = T.init_lm(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(1)
+    B, S, N = 1, 16, 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), dtype=jnp.int32)
+    logits0, cache = T.prefill(cfg, params, toks)
+    # first generated token comes from the prefill logits
+    cur = jnp.argmax(logits0, -1).astype(jnp.int32)
+    generated = list(np.asarray(toks[0])) + [int(cur[0])]
+    outs = [int(cur[0])]
+    for _ in range(N - 1):
+        logits, cache = T.decode_step(cfg, params, cur, cache)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(int(cur[0]))
+        generated.append(int(cur[0]))
+    full = jnp.asarray([generated], dtype=jnp.int32)
+    logits_tf, _ = T.forward_train(cfg, params, full[:, :-1])
+    if cfg.n_experts:
+        # MoE: ~1e-6 routing-group numerics can flip near-tied argmaxes;
+        # require the decoded token's TF logit to be within tolerance of
+        # the TF max instead of exact argmax equality.
+        for i, tok in enumerate(outs):
+            row = np.asarray(logits_tf[0, S - 1 + i], np.float32)
+            assert row.max() - row[tok] < 5e-3 * (np.abs(row).max() + 1e-6)
+    else:
+        tf_preds = [int(jnp.argmax(logits_tf[0, S - 1 + i]))
+                    for i in range(N)]
+        assert outs == tf_preds
+
+
+def test_swa_cache_bounded():
+    """Sliding-window archs keep O(window) cache regardless of context."""
+    cfg = get_smoke_config("mixtral-8x7b")  # window 64 in smoke
+    cache = T.init_cache(cfg, batch=2, ctx_len=4096)
+    k = cache["scanned"]["p0_attn"]["k"]
+    assert k.shape[2] <= cfg.sliding_window
+
+
+def test_long_context_cache_for_ssm_is_o1():
+    cfg = get_smoke_config("xlstm-350m")
+    cache = T.init_cache(cfg, batch=2, ctx_len=100_000)
+    total = sum(np.prod(x.shape) for x in jax.tree_util.tree_leaves(cache))
+    assert total < 5e6  # constant-size state, no KV growth

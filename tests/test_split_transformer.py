@@ -1,0 +1,110 @@
+"""HuSCF applied to transformers (§7.3): split forward equivalence,
+training progress, and clustered federation semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.split_transformer import (LMProfileGroup, default_groups,
+                                          federate_split_lm, init_split_lm,
+                                          make_split_train_step,
+                                          split_lm_forward)
+from repro.data.tokens import lm_batches
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("granite-3-2b"), n_layers=6)
+    groups = default_groups(cfg, n_weak=2, n_strong=2)
+    params = init_split_lm(jax.random.PRNGKey(0), cfg, groups)
+    return cfg, groups, params
+
+
+def _batch(cfg, groups, seed=0, b=2, s=16):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": {g.name: jnp.asarray(
+            rng.integers(0, cfg.vocab, (g.n_clients, b, s)), jnp.int32)
+            for g in groups},
+        "labels": {g.name: jnp.asarray(
+            rng.integers(0, cfg.vocab, (g.n_clients, b, s)), jnp.int32)
+            for g in groups},
+    }
+
+
+def test_forward_shapes_and_finiteness(setup):
+    cfg, groups, params = setup
+    batch = _batch(cfg, groups)
+    logits = split_lm_forward(cfg, params, groups, batch["tokens"])
+    for g in groups:
+        assert logits[g.name].shape == (g.n_clients, 2, 16, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits[g.name])))
+
+
+def test_clients_isolated_within_group(setup):
+    """Per-client segments: changing one client's head must not change
+    another client's logits (data/label isolation per paper)."""
+    cfg, groups, params = setup
+    batch = _batch(cfg, groups)
+    base = split_lm_forward(cfg, params, groups, batch["tokens"])
+    g0 = groups[0]
+    perturbed = jax.tree_util.tree_map(lambda x: x, params)
+    emb = perturbed["clients"][g0.name]["embed"]["table"]
+    perturbed["clients"][g0.name]["embed"] = {
+        "table": emb.at[0].add(1.0)}  # client 0 only
+    out = split_lm_forward(cfg, perturbed, groups, batch["tokens"])
+    # client 0 changed
+    assert not np.allclose(np.asarray(out[g0.name][0]),
+                           np.asarray(base[g0.name][0]))
+    # client 1 untouched
+    np.testing.assert_allclose(np.asarray(out[g0.name][1]),
+                               np.asarray(base[g0.name][1]), atol=1e-6)
+
+
+def test_training_reduces_loss(setup):
+    cfg, groups, params = setup
+    step, opt_init = make_split_train_step(cfg, groups, lr=3e-4)
+    opt = opt_init(params)
+    step = jax.jit(step)
+    batch = _batch(cfg, groups, seed=1)
+    p, o, m0 = step(params, opt, batch)
+    for _ in range(5):
+        p, o, m = step(p, o, batch)
+    assert float(m["loss"]) < float(m0["loss"])
+
+
+def test_federation_cluster_isolation(setup):
+    """Clients in different clusters must not mix embeddings."""
+    cfg, groups, params = setup
+    # mark clients with distinct constants
+    marked = jax.tree_util.tree_map(lambda x: x, params)
+    for gi, g in enumerate(groups):
+        t = marked["clients"][g.name]["embed"]["table"]
+        marks = jnp.arange(g.n_clients, dtype=t.dtype) + 10 * gi
+        marked["clients"][g.name]["embed"]["table"] = (
+            jnp.zeros_like(t) + marks[:, None, None])
+    # clusters: {g0c0, g0c1} vs {g1c0, g1c1}
+    labels = np.array([0, 0, 1, 1])
+    weights = np.array([0.5, 0.5, 0.25, 0.75])
+    out = federate_split_lm(marked, groups, weights, labels)
+    g0, g1 = groups
+    t0 = np.asarray(out["clients"][g0.name]["embed"]["table"])
+    t1 = np.asarray(out["clients"][g1.name]["embed"]["table"])
+    # cluster 0 average = (0 + 1)/2 = 0.5; both members receive it
+    np.testing.assert_allclose(t0[0], 0.5, atol=1e-5)
+    np.testing.assert_allclose(t0[1], 0.5, atol=1e-5)
+    # cluster 1 weighted avg = 0.25*10 + 0.75*11 = 10.75
+    np.testing.assert_allclose(t1[0], 10.75, atol=1e-5)
+    np.testing.assert_allclose(t1[1], 10.75, atol=1e-5)
+
+
+def test_cut_depths_respected(setup):
+    cfg, groups, params = setup
+    for g in groups:
+        heads = params["clients"][g.name]["head"]
+        tails = params["clients"][g.name]["tail"]
+        assert len(heads) == g.cut_head
+        assert len(tails) == g.cut_tail
