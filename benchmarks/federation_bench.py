@@ -1,0 +1,76 @@
+"""Federation-round macro-benchmark: fused single-dispatch path vs the
+legacy per-(layer, cluster, leaf) loop.
+
+32 clients x the paper cGAN (~3M params across G+D client segments),
+heterogeneous cuts (4 profile groups), 3 clusters — the server-side
+hot spot of every federation round (Eq. 16). Reports warm wall-clock
+per round; ``bench/federation_round`` carries the headline
+fused-vs-legacy comparison for the perf trajectory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.kernel_bench import _bench
+from repro.core.federation import federate_client_params
+from repro.core.latency import Cut, PAPER_DEVICES
+from repro.core.splitting import (client_owned_layers, group_by_profile,
+                                  layer_pair)
+from repro.models.gan import DISC_LAYER_DEFS, GEN_LAYER_DEFS
+
+N_CLIENTS = 32
+N_CLUSTERS = 3
+N_LAYERS = {"G": 5, "D": 5}
+_CUTS = (Cut(1, 3, 1, 3), Cut(2, 4, 2, 4), Cut(1, 4, 2, 3), Cut(2, 3, 1, 4))
+
+
+def _build_population():
+    devices = [PAPER_DEVICES[i % len(_CUTS)] for i in range(N_CLIENTS)]
+    cuts = [_CUTS[i % len(_CUTS)] for i in range(N_CLIENTS)]
+    groups = group_by_profile(devices, cuts)
+    key = jax.random.PRNGKey(0)
+    params = {}
+    for net, defs in (("G", GEN_LAYER_DEFS), ("D", DISC_LAYER_DEFS)):
+        for g in groups:
+            params.setdefault(g.name, {}).setdefault(net, {})
+            for l in client_owned_layers(layer_pair(g.cut, net), 5):
+                key, sub = jax.random.split(key)
+                keys = jax.random.split(sub, g.size)
+                params[g.name][net][str(l)] = jax.vmap(
+                    lambda kk, l=l: defs[l][0](kk, jnp.float32))(keys)
+    # model size (one full G+D copy) for the scale label
+    key = jax.random.PRNGKey(1)
+    n_params = sum(
+        x.size
+        for defs in (GEN_LAYER_DEFS, DISC_LAYER_DEFS) for init, _ in defs
+        for x in jax.tree_util.tree_leaves(init(key, jnp.float32)))
+    return groups, params, n_params
+
+
+def run(report):
+    groups, params, n_params = _build_population()
+    rng = np.random.default_rng(0)
+    weights = rng.random(N_CLIENTS)
+    labels = np.arange(N_CLIENTS) % N_CLUSTERS
+    plans = {}
+
+    def round_with(**kw):
+        return federate_client_params(groups, params, weights, labels,
+                                      n_layers=N_LAYERS, plan_cache=plans,
+                                      **kw)
+
+    us_fused = _bench(round_with, iters=3)
+    us_kernel = _bench(lambda: round_with(use_kernel=True), iters=3)
+    us_legacy = _bench(lambda: round_with(fused=False), iters=1)
+
+    scale = f"{N_CLIENTS}c_{n_params/1e6:.1f}Mp"
+    report(f"federation/fused_jnp_{scale}", us_fused, "1 jit/net")
+    report(f"federation/fused_kernel_{scale}", us_kernel,
+           "1 pallas_call/net (interpret)")
+    report(f"federation/legacy_loop_{scale}", us_legacy,
+           "per-(layer,cluster,leaf) dispatches")
+    best = min(us_fused, us_kernel)
+    report("bench/federation_round", best,
+           f"legacy={us_legacy:.0f}us speedup={us_legacy / best:.2f}x")

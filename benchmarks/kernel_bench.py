@@ -15,8 +15,7 @@ from repro.kernels import ops, ref
 
 
 def _bench(fn, *args, iters: int = 5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))   # warmup/compile, one call
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -34,6 +33,16 @@ def run(report):
     report("kernel/weighted_agg_16x3M", us, f"{gbps:.1f}GB/s")
     us = _bench(jax.jit(ref.weighted_agg_ref), x, w)
     report("kernel/weighted_agg_ref", us, "oracle")
+
+    # clustered multi-output aggregation: 16 (layer, cluster) segments
+    # over the same 16 x 3M stacked buffer (the fused federation round)
+    S = 16
+    seg_w = jax.nn.softmax(jax.random.normal(key, (S, K)), axis=1)
+    us = _bench(ops.clustered_agg, seg_w, x)
+    gbps = (K + S) * D * 4 / (us / 1e6) / 1e9
+    report("kernel/clustered_agg_16seg_16x3M", us, f"{gbps:.1f}GB/s")
+    us = _bench(jax.jit(ref.clustered_agg_ref), seg_w, x)
+    report("kernel/clustered_agg_ref", us, "oracle")
 
     # kmeans assign: 256 clients x 6272-dim activations, 4 centers
     x = jax.random.normal(key, (256, 6272))

@@ -1,26 +1,29 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
-``python -m benchmarks.run [--full] [--only SECTION]``
+``python -m benchmarks.run [--full] [--only SECTION] [--json PATH]``
 
 Sections:
-  latency   — paper Tables 15/16/24/27 (analytic, exact reproduction)
-  kernels   — Pallas kernel micro-benches
-  quality   — paper Tables 6-13 analogue on synthetic multi-domain data
-  kld       — paper Table 17 (activation vs label KLD)
-  ablation  — paper Table 23 (component ablation)
-  roofline  — derived roofline terms from results/dryrun.jsonl (if present)
+  latency    — paper Tables 15/16/24/27 (analytic, exact reproduction)
+  kernels    — Pallas kernel micro-benches
+  federation — fused vs legacy Eq.-16 federation round (32 clients)
+  quality    — paper Tables 6-13 analogue on synthetic multi-domain data
+  kld        — paper Table 17 (activation vs label KLD)
+  ablation   — paper Table 23 (component ablation)
+  roofline   — derived roofline terms from results/dryrun.jsonl (if present)
+
+``--json PATH`` additionally writes the report rows as a
+``BENCH_*.json``-compatible dict: ``{"meta": {...}, "results":
+{name: {"us_per_call": float, "derived": str}}}`` — the perf
+trajectory file tracked from PR 1 onward.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
-
-
-def _report(name: str, value: float, derived: str = "") -> None:
-    print(f"{name},{value:.3f},{derived}", flush=True)
 
 
 def main() -> None:
@@ -28,10 +31,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="all scenarios/algorithms (slow on CPU)")
     ap.add_argument("--only", default=None, help="run a single section")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a BENCH_*.json dict")
     args = ap.parse_args()
 
-    sections = ["latency", "kernels", "quality", "kld", "ablation",
-                "roofline"]
+    rows = []
+
+    def _report(name: str, value: float, derived: str = "") -> None:
+        rows.append({"name": name, "us_per_call": float(value),
+                     "derived": derived})
+        print(f"{name},{value:.3f},{derived}", flush=True)
+
+    sections = ["latency", "kernels", "federation", "quality", "kld",
+                "ablation", "roofline"]
     if args.only:
         sections = [args.only]
 
@@ -43,6 +55,9 @@ def main() -> None:
     if "kernels" in sections:
         from benchmarks import kernel_bench
         kernel_bench.run(_report)
+    if "federation" in sections:
+        from benchmarks import federation_bench
+        federation_bench.run(_report)
     if "quality" in sections:
         from benchmarks import quality_scenarios
         quality_scenarios.run(_report, fast=not args.full)
@@ -70,7 +85,28 @@ def main() -> None:
             print("# roofline: results/dryrun.jsonl missing — run "
                   "python -m repro.launch.dryrun --all first",
                   file=sys.stderr)
-    print(f"# total wall: {time.time() - t_start:.1f}s", file=sys.stderr)
+    wall = time.time() - t_start
+    print(f"# total wall: {wall:.1f}s", file=sys.stderr)
+
+    if args.json:
+        out = {
+            "meta": {
+                "argv": sys.argv[1:],
+                "sections": sections,
+                "unix_time": int(t_start),
+                "total_wall_s": round(wall, 3),
+            },
+            "results": {r["name"]: {"us_per_call": r["us_per_call"],
+                                    "derived": r["derived"]}
+                        for r in rows},
+        }
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# json report: {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 smoke gate: the full pytest suite plus the kernel
+# micro-benches with a JSON perf report. Fails on any nonzero exit.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+mkdir -p results
+python -m benchmarks.run --only kernels --json results/bench_kernels.json
+
+echo "ci_smoke: OK"

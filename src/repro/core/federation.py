@@ -9,19 +9,37 @@ Server-side segments are single shared copies trained on the combined
 stream (see DESIGN.md §7 for the interpretation of the paper's global
 Eq. 16 on shared parameters).
 
-The weighted reduction over the stacked client axis is the compute hot
-spot; `use_kernel=True` routes it through the Pallas `weighted_agg`
-kernel (interpret mode on CPU).
+Fused round (DESIGN.md §Fused federation): a cached ``FederationPlan``
+packs every profile group's stacked client segments into one
+contiguous ``theta [K, D]`` f32 buffer per net (one row per client
+copy, one column run per ownable layer, zero-filled where a cut does
+not own the layer), builds the block-diagonal Eq.-15/16 weight matrix
+on the host — one block per (layer, cluster), one row per receiving
+client copy, factored exactly as ``W = B @ A`` with ``A [S, K]`` the
+per-segment reduce rows and ``B`` the one-hot broadcast — and runs
+flatten -> A @ theta -> broadcast-gather -> unflatten as a single
+jitted computation, one Pallas ``clustered_agg`` call per net when
+``use_kernel=True``. Treedefs, leaf shapes, and layer/row offsets are
+cached on the plan so repeat rounds do zero host-side tree walking.
+The original quadruple loop (net x layer x cluster x member) is kept
+as the correctness oracle behind ``fused=False``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.splitting import ProfileGroup, client_owned_layers, layer_pair
+
+# Segment-count padding: round the number of (layer, cluster) blocks up
+# so A's leading dim takes few distinct values (bounds jit retraces as
+# the silhouette-selected k changes round to round) and stays
+# sublane-aligned for the kernel.
+_SEGMENT_PAD = 8
 
 
 def weighted_average_stacked(stacked: Any, weights: jnp.ndarray,
@@ -38,21 +56,318 @@ def weighted_average_stacked(stacked: Any, weights: jnp.ndarray,
                              ).astype(x.dtype), stacked)
 
 
+# ---------------------------------------------------------------------------
+# fused single-dispatch federation round
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _LeafSpec:
+    shape: Tuple[int, ...]      # per-client shape (no leading K axis)
+    size: int
+    dtype: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class _SegmentEntry:
+    """One (group, layer) tile of the flat buffer: the group's rows x
+    the layer's column run."""
+    layer: int
+    gname: str
+    row0: int
+    row1: int
+    col0: int
+    width: int                  # flat per-copy param count of the layer
+    sid0: int                   # slice into the per-copy segment-id vec
+    sid1: int
+    treedef: Any
+    leaves: Tuple[_LeafSpec, ...]
+
+
+class FederationPlan:
+    """Host-side flattening/aggregation plan for one (net, topology).
+
+    Flat layout: ``theta [K, D]`` — one row per client copy (groups in
+    canonical order), one contiguous column run per client-ownable
+    layer (zero-filled where a client's cut does not own the layer).
+    The Eq.-16 round is then ``W @ theta`` with the block-diagonal
+    per-(layer, cluster) weight matrix, factored exactly as
+    ``W = B @ A``: ``A [S, K]`` holds one normalized reduce row per
+    segment and the one-hot ``B`` broadcasts each segment's aggregate
+    back to every receiving copy (a gather on the [S, D] output,
+    restricted to that layer's columns — non-member columns of an
+    ``A`` row are never read).
+
+    Built once from a template of the client params; repeat rounds
+    reuse the cached treedefs/shapes/offsets and the jitted aggregate
+    functions (retraced only when the segment count changes).
+    """
+
+    def __init__(self, groups: Sequence[ProfileGroup], net: str,
+                 n_layers: int, template: Dict[str, Dict[str, Any]]):
+        self.net = net
+        self.n_layers = n_layers
+        # rows: one per client copy, groups in canonical order
+        self._group_rows: Dict[str, Tuple[int, int]] = {}
+        self.row_cids: List[int] = []
+        row = 0
+        for g in groups:
+            self._group_rows[g.name] = (row, row + g.size)
+            self.row_cids.extend(g.client_ids)
+            row += g.size
+        self.n_rows = row
+
+        owned: Dict[str, List[int]] = {
+            g.name: client_owned_layers(layer_pair(g.cut, net), n_layers)
+            for g in groups}
+        layers = sorted({l for ls in owned.values() for l in ls})
+
+        # columns: contiguous run per client-ownable layer; leaf specs
+        # must agree across groups (same layer definition).
+        self._col_runs: Dict[int, Tuple[int, int]] = {}
+        col = 0
+        layer_specs: Dict[int, Tuple] = {}
+        for l in layers:
+            for g in groups:
+                if l not in owned[g.name]:
+                    continue
+                leaves, treedef = jax.tree_util.tree_flatten(
+                    template[g.name][str(l)])
+                specs = tuple(_LeafSpec(
+                    tuple(x.shape[1:]),
+                    int(np.prod(x.shape[1:], dtype=np.int64)),
+                    x.dtype) for x in leaves)
+                if l not in layer_specs:
+                    layer_specs[l] = (treedef, specs)
+                elif layer_specs[l][1] != specs:
+                    raise ValueError(
+                        f"layer {l} leaf layout differs across groups "
+                        f"(group {g.name})")
+            width = sum(s.size for s in layer_specs[l][1])
+            self._col_runs[l] = (col, width)
+            col += width
+        self.n_cols = col
+
+        # entries: (group, layer) tiles + the per-copy segment-id slice
+        self.entries: List[_SegmentEntry] = []
+        sid = 0
+        for g in groups:
+            r0, r1 = self._group_rows[g.name]
+            for l in owned[g.name]:
+                c0, w = self._col_runs[l]
+                treedef, specs = layer_specs[l]
+                self.entries.append(_SegmentEntry(
+                    l, g.name, r0, r1, c0, w, sid, sid + g.size,
+                    treedef, specs))
+                sid += g.size
+        self.n_copies = sid          # receiving (layer, client copy) pairs
+
+        # per-layer owner rows for the weight blocks
+        self._layer_rows: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        cids_arr = np.asarray(self.row_cids, np.int64)
+        for l in layers:
+            rows = np.concatenate([
+                np.arange(*self._group_rows[g.name]) for g in groups
+                if l in owned[g.name]])
+            self._layer_rows.append((l, rows, cids_arr[rows]))
+        self._owned = owned
+        self._groups_order = [g.name for g in groups]
+        self._agg_fns: Dict[Tuple[bool, bool], Callable] = {}
+
+    # -- host-side weight matrix (Eq. 15/16 block diagonal) ----------------
+    def weight_segments(self, weights: np.ndarray, cluster_labels: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Returns (A [S, K], seg_ids [n_copies]).
+
+        ``A`` rows are the normalized per-(layer, cluster) reduce
+        weights over that layer's owner rows (zero elsewhere);
+        ``seg_ids`` maps every receiving (layer, client copy) pair —
+        in ``entries`` order — to its segment row, i.e. the one-hot
+        broadcast factor ``B`` of the block-diagonal ``W = B @ A``.
+        S is padded to a multiple of _SEGMENT_PAD with zero rows
+        (bounds retraces; padded segments are never gathered)."""
+        rows_a: List[np.ndarray] = []
+        seg_of: Dict[Tuple[int, int], int] = {}
+        for l, rows, cids in self._layer_rows:
+            for c in np.unique(cluster_labels[cids]):
+                sel = cluster_labels[cids] == c
+                w = np.asarray(weights, np.float64)[cids[sel]]
+                if w.sum() <= 0:
+                    w = np.ones_like(w)
+                w = w / w.sum()
+                a = np.zeros(self.n_rows, np.float32)
+                a[rows[sel]] = w.astype(np.float32)
+                seg_of[(l, int(c))] = len(rows_a)
+                rows_a.append(a)
+        seg_ids = np.zeros(self.n_copies, np.int32)
+        for e in self.entries:
+            row_cids = self.row_cids[e.row0:e.row1]
+            seg_ids[e.sid0:e.sid1] = [
+                seg_of[(e.layer, int(cluster_labels[cid]))]
+                for cid in row_cids]
+        S = max(_SEGMENT_PAD,
+                -(-len(rows_a) // _SEGMENT_PAD) * _SEGMENT_PAD)
+        A = np.zeros((S, self.n_rows), np.float32)
+        if rows_a:
+            A[:len(rows_a)] = np.stack(rows_a)
+        return A, seg_ids
+
+    # -- device-side flatten / unflatten (inside jit) ----------------------
+    def _flatten(self, net_params: Dict[str, Dict[str, Any]]) -> jnp.ndarray:
+        bufs = []
+        for gname in self._groups_order:
+            r0, r1 = self._group_rows[gname]
+            k = r1 - r0
+            parts, col = [], 0
+            for l, (c0, w) in sorted(self._col_runs.items()):
+                assert c0 == col
+                if l in self._owned[gname]:
+                    leaves = jax.tree_util.tree_leaves(net_params[gname][str(l)])
+                    parts.append(jnp.concatenate(
+                        [x.reshape(k, -1).astype(jnp.float32)
+                         for x in leaves], axis=1))
+                else:
+                    parts.append(jnp.zeros((k, w), jnp.float32))
+                col += w
+            bufs.append(jnp.concatenate(parts, axis=1))
+        return jnp.concatenate(bufs, axis=0)
+
+    def _unflatten(self, agg: jnp.ndarray, seg_ids: jnp.ndarray
+                   ) -> Dict[str, Dict[str, Any]]:
+        out: Dict[str, Dict[str, Any]] = {}
+        for e in self.entries:
+            block = jnp.take(agg[:, e.col0:e.col0 + e.width],
+                             seg_ids[e.sid0:e.sid1], axis=0)
+            leaves, off = [], 0
+            for s in e.leaves:
+                leaves.append(block[:, off:off + s.size]
+                              .reshape((e.row1 - e.row0,) + s.shape)
+                              .astype(s.dtype))
+                off += s.size
+            out.setdefault(e.gname, {})[str(e.layer)] = \
+                jax.tree_util.tree_unflatten(e.treedef, leaves)
+        return out
+
+    # -- the jitted round --------------------------------------------------
+    def _make_agg_fn(self, use_kernel: bool, donate: bool) -> Callable:
+        def fn(net_params, A, seg_ids):
+            theta = self._flatten(net_params)
+            if use_kernel:
+                from repro.kernels import ops as kops
+                agg = kops.clustered_agg(A, theta)
+            else:
+                agg = A @ theta
+            return self._unflatten(agg, seg_ids)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    def aggregate(self, net_params: Dict[str, Dict[str, Any]],
+                  A: np.ndarray, seg_ids: np.ndarray,
+                  use_kernel: bool = False,
+                  donate: bool = False) -> Dict[str, Dict[str, Any]]:
+        key = (use_kernel, donate)
+        if key not in self._agg_fns:
+            self._agg_fns[key] = self._make_agg_fn(use_kernel, donate)
+        return self._agg_fns[key](net_params, jnp.asarray(A, jnp.float32),
+                                  jnp.asarray(seg_ids, jnp.int32))
+
+
+_PLAN_CACHE: Dict[Tuple, FederationPlan] = {}
+
+
+def _plan_key(groups: Sequence[ProfileGroup], net: str, n_layers: int,
+              template: Dict[str, Dict[str, Any]]) -> Tuple:
+    # The leaf-layout fingerprint guards the shared cache against two
+    # same-topology populations with differently-shaped layer params
+    # (walking ~100 aval objects per round is noise next to the round).
+    layout = tuple(
+        (g.name, tuple(
+            (l, tuple((tuple(x.shape), str(x.dtype)) for x in
+                      jax.tree_util.tree_leaves(tree)))
+            for l, tree in sorted(template[g.name].items())))
+        for g in groups)
+    return (net, n_layers, tuple(
+        (g.name, g.cut.as_tuple(), tuple(g.client_ids)) for g in groups),
+        layout)
+
+
+def get_federation_plan(groups: Sequence[ProfileGroup], net: str,
+                        n_layers: int,
+                        template: Dict[str, Dict[str, Any]],
+                        plan_cache: Optional[Dict] = None) -> FederationPlan:
+    cache = _PLAN_CACHE if plan_cache is None else plan_cache
+    key = _plan_key(groups, net, n_layers, template)
+    if key not in cache:
+        cache[key] = FederationPlan(groups, net, n_layers, template)
+    return cache[key]
+
+
+def donate_default() -> bool:
+    """Whether a caller that *owns* its buffers (replaces every
+    reference after the round, like the trainer) should donate them.
+    CPU XLA ignores donation (with a warning per call) — only donate
+    where the runtime can actually alias the buffers."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
 def federate_client_params(groups: Sequence[ProfileGroup],
                            client_params: Dict[str, Dict[str, Dict[str, Any]]],
                            weights: np.ndarray,
                            cluster_labels: np.ndarray,
                            n_layers: Dict[str, int] = None,
-                           use_kernel: bool = False
+                           use_kernel: bool = False,
+                           fused: bool = True,
+                           plan_cache: Optional[Dict] = None,
+                           donate: Optional[bool] = None
                            ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Aggregate client-held layers cluster-wise.
 
     client_params: {group.name: {net: {str(layer): stacked pytree}}}
     weights: Eq.-15 intra-cluster weights, indexed by global client id.
     cluster_labels: cluster id per global client id.
+    fused=True runs the single-dispatch flat-buffer path (one jitted
+    call per net; Pallas kernel when use_kernel); fused=False runs the
+    legacy per-(layer, cluster, leaf) loop (correctness oracle).
+    donate=True aliases the input buffers into the jitted round —
+    only safe when the caller drops every reference to client_params
+    afterwards (the trainer does; pass ``donate_default()``). The
+    default never donates, so repeated calls on the same params are
+    always valid.
     Returns a new client_params with aggregated copies broadcast back.
     """
     n_layers = n_layers or {"G": 5, "D": 5}
+    if not fused:
+        return _federate_client_params_legacy(
+            groups, client_params, weights, cluster_labels,
+            n_layers=n_layers, use_kernel=use_kernel)
+    if donate is None:
+        donate = False
+    weights = np.asarray(weights)
+    cluster_labels = np.asarray(cluster_labels)
+    out = {gname: dict(nets) for gname, nets in client_params.items()}
+    for net, n_lay in n_layers.items():
+        template = {g.name: client_params[g.name][net] for g in groups}
+        plan = get_federation_plan(groups, net, n_lay, template,
+                                   plan_cache=plan_cache)
+        if plan.n_rows == 0:
+            continue
+        A, seg_ids = plan.weight_segments(weights, cluster_labels)
+        new_net = plan.aggregate(template, A, seg_ids,
+                                 use_kernel=use_kernel, donate=donate)
+        for g in groups:
+            if g.name in new_net:
+                out[g.name][net] = new_net[g.name]
+    return out
+
+
+def _federate_client_params_legacy(
+        groups: Sequence[ProfileGroup],
+        client_params: Dict[str, Dict[str, Dict[str, Any]]],
+        weights: np.ndarray,
+        cluster_labels: np.ndarray,
+        n_layers: Dict[str, int],
+        use_kernel: bool = False
+        ) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    """Reference quadruple loop: net x layer x cluster x member, one
+    gather/stack/reduce/scatter dispatch chain per combination."""
     out = jax.tree_util.tree_map(lambda x: x, client_params)  # shallow copy
 
     for net, n_lay in n_layers.items():
@@ -93,11 +408,18 @@ def federate_client_params(groups: Sequence[ProfileGroup],
 def fedavg_uniform(groups: Sequence[ProfileGroup],
                    client_params: Dict[str, Dict[str, Dict[str, Any]]],
                    sizes: np.ndarray,
-                   n_layers: Dict[str, int] = None
+                   n_layers: Dict[str, int] = None,
+                   use_kernel: bool = False,
+                   fused: bool = True,
+                   plan_cache: Optional[Dict] = None,
+                   donate: Optional[bool] = None
                    ) -> Dict[str, Dict[str, Dict[str, Any]]]:
-    """Vanilla FedAvg (first two federation rounds, paper §4.5):
-    single global cluster, weights proportional to dataset size."""
+    """Vanilla FedAvg (first two federation rounds, paper §4.5): the
+    degenerate single-cluster case of the fused path — one global
+    cluster, weights proportional to dataset size."""
     weights = sizes.astype(np.float64) / sizes.sum()
     labels = np.zeros(len(sizes), np.int64)
     return federate_client_params(groups, client_params, weights, labels,
-                                  n_layers=n_layers)
+                                  n_layers=n_layers, use_kernel=use_kernel,
+                                  fused=fused, plan_cache=plan_cache,
+                                  donate=donate)

@@ -28,7 +28,8 @@ import numpy as np
 
 from repro.core import kld as kld_mod
 from repro.core.clustering import cluster_activations
-from repro.core.federation import federate_client_params, fedavg_uniform
+from repro.core.federation import (donate_default, federate_client_params,
+                                   fedavg_uniform)
 from repro.core.genetic import GAConfig, optimize_cuts
 from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
 from repro.core.splitting import (ProfileGroup, group_by_profile, layer_pair,
@@ -202,6 +203,10 @@ class HuSCFTrainer:
         key = jax.random.PRNGKey(config.seed)
         self.state = self._init_state(key)
         self._rng = np.random.default_rng(config.seed + 1)
+        # fused-federation plans (treedefs/leaf shapes/layer offsets),
+        # built on first round and reused so repeat rounds pay zero
+        # host-side tree walking.
+        self._fed_plans: Dict = {}
         self._step_fn = self._build_step()
         self._gen_fn = None
         self.fed_round = 0
@@ -373,8 +378,13 @@ class HuSCFTrainer:
             for net in ("G", "D"):
                 wrapped = {g.name: {net: self.state[net]["client"][g.name]}
                            for g in self.groups}
+                # the trainer drops its references right below, so the
+                # round may donate the old client buffers (TPU/GPU)
                 out = fedavg_uniform(self.groups, wrapped, self.sizes,
-                                     n_layers={net: 5})
+                                     n_layers={net: 5},
+                                     use_kernel=self.cfg.use_kernel,
+                                     plan_cache=self._fed_plans,
+                                     donate=donate_default())
                 self.state[net]["client"] = {g.name: out[g.name][net]
                                              for g in self.groups}
             return {"round": self.fed_round, "mode": "fedavg"}
@@ -395,7 +405,9 @@ class HuSCFTrainer:
                        for g in self.groups}
             out = federate_client_params(self.groups, wrapped, weights,
                                          cl.labels, n_layers={net: 5},
-                                         use_kernel=self.cfg.use_kernel)
+                                         use_kernel=self.cfg.use_kernel,
+                                         plan_cache=self._fed_plans,
+                                         donate=donate_default())
             self.state[net]["client"] = {g.name: out[g.name][net]
                                          for g in self.groups}
         return {"round": self.fed_round, "mode": "clustered",

@@ -31,6 +31,21 @@ def weighted_agg(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
 
 
 @jax.jit
+def clustered_agg(weights: jnp.ndarray, stacked: jnp.ndarray) -> jnp.ndarray:
+    """Multi-output clustered aggregation: weights [S, K] rows are
+    normalized (layer, cluster) segments; out[s] = sum_k W[s,k] *
+    stacked[k, ...] in f32 (any trailing shape).
+
+    NOTE: the clustered family takes weights FIRST (matmul order,
+    ``W @ theta``), unlike the legacy ``weighted_agg(stacked, w)`` —
+    a transposed call fails on shape unless S == K."""
+    K = stacked.shape[0]
+    flat = stacked.reshape(K, -1)
+    out = _wa.clustered_agg_flat(weights, flat, interpret=INTERPRET)
+    return out.reshape((weights.shape[0],) + stacked.shape[1:])
+
+
+@jax.jit
 def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     return _km.kmeans_assign(x, centers, interpret=INTERPRET)
 

@@ -20,6 +20,22 @@ def weighted_agg_ref(stacked: jnp.ndarray, weights: jnp.ndarray
     return out.reshape(stacked.shape[1:]).astype(stacked.dtype)
 
 
+def clustered_agg_ref(weights: jnp.ndarray, stacked: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Multi-output clustered aggregation: out[s] = sum_k W[s,k] x[k].
+
+    weights [S, K] (one normalized row per aggregation segment);
+    stacked [K, ...] any float dtype. Accumulates and returns f32
+    (the caller casts per-leaf on unflatten). Weights come first
+    across the clustered family (matmul order ``W @ theta``), unlike
+    the legacy single-output ``weighted_agg_ref(stacked, w)``.
+    """
+    w = weights.astype(jnp.float32)
+    flat = stacked.reshape(stacked.shape[0], -1).astype(jnp.float32)
+    out = w @ flat
+    return out.reshape((w.shape[0],) + stacked.shape[1:])
+
+
 def kmeans_assign_ref(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     """Nearest-center assignment: x [N, D], centers [M, D] -> labels [N]."""
     d2 = (jnp.sum(x.astype(jnp.float32) ** 2, -1)[:, None]

@@ -7,6 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (bare env)")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import load_checkpoint, save_checkpoint

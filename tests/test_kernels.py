@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.weighted_agg import weighted_agg_flat
+from repro.kernels.weighted_agg import clustered_agg_flat, weighted_agg_flat
 from repro.kernels.kmeans_assign import kmeans_assign
 from repro.kernels.flash_decode import flash_decode
 
@@ -32,6 +32,54 @@ def test_weighted_agg_nd_tree():
     got = ops.weighted_agg(x, w)
     want = ref.weighted_agg_ref(x, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("S", [1, 4, 15])
+@pytest.mark.parametrize("K", [1, 3, 32])
+@pytest.mark.parametrize("D", [128, 8192, 10_001])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_clustered_agg_sweep(S, K, D, dtype):
+    key = jax.random.PRNGKey(S * 100 + K * 10 + D)
+    x = jax.random.normal(key, (K, D), dtype)
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2), (S, K)),
+                       axis=1)
+    got = clustered_agg_flat(w, x, interpret=True)
+    want = ref.clustered_agg_ref(w, x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("block_tiles", [1, 2, None])
+def test_clustered_agg_block_tiles(block_tiles):
+    """Tiled streaming (compiled-mode layout) and coalesced interpret
+    blocks agree with the oracle."""
+    S, K, D = 6, 5, 3 * 8 * 1024 + 77
+    x = jax.random.normal(jax.random.PRNGKey(0), (K, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (S, K))
+    got = clustered_agg_flat(w, x, block_tiles=block_tiles, interpret=True)
+    want = ref.clustered_agg_ref(w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_clustered_agg_nd_op():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 3, 7, 5))
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (2, 4)))
+    got = ops.clustered_agg(w, x)
+    want = ref.clustered_agg_ref(w, x)
+    assert got.shape == (2, 3, 7, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_weighted_agg_is_single_segment_case():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 1000))
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(1), (5,)))
+    single = weighted_agg_flat(x, w, interpret=True)
+    multi = clustered_agg_flat(w.reshape(1, -1), x, interpret=True)[0]
+    np.testing.assert_allclose(np.asarray(single), np.asarray(multi),
+                               atol=1e-6)
 
 
 @pytest.mark.parametrize("N", [1, 100, 257])
