@@ -1,13 +1,26 @@
 """Federation-round macro-benchmark: fused single-dispatch path vs the
-legacy per-(layer, cluster, leaf) loop.
+legacy per-(layer, cluster, leaf) loop, plus the client-axis-sharded
+round at 1/2/4/8 host devices.
 
 32 clients x the paper cGAN (~3M params across G+D client segments),
 heterogeneous cuts (4 profile groups), 3 clusters — the server-side
 hot spot of every federation round (Eq. 16). Reports warm wall-clock
 per round; ``bench/federation_round`` carries the headline
 fused-vs-legacy comparison for the perf trajectory.
+
+Sharded section: the forced host-device count is fixed at backend
+init, so each device count runs in its own subprocess
+(``python -m benchmarks.federation_bench --sharded-worker N`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``) and reports
+its warm round time back on stdout. On this CPU container the shards
+share one physical socket — the numbers track dispatch/collective
+overhead of the shard_map path, not real multi-host scaling.
 """
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -49,11 +62,19 @@ def _build_population():
     return groups, params, n_params
 
 
-def run(report):
+def _round_inputs():
+    """One source of truth for the benchmark round's inputs — the
+    sharded worker subprocess must aggregate byte-identical weights/
+    labels/population or its rows stop being comparable to fused_*."""
     groups, params, n_params = _build_population()
     rng = np.random.default_rng(0)
     weights = rng.random(N_CLIENTS)
     labels = np.arange(N_CLIENTS) % N_CLUSTERS
+    return groups, params, n_params, weights, labels
+
+
+def run(report):
+    groups, params, n_params, weights, labels = _round_inputs()
     plans = {}
 
     def round_with(**kw):
@@ -74,3 +95,62 @@ def run(report):
     best = min(us_fused, us_kernel)
     report("bench/federation_round", best,
            f"legacy={us_legacy:.0f}us speedup={us_legacy / best:.2f}x")
+
+    # --- sharded round at 1/2/4/8 forced host devices (subprocess per
+    # count: the device-count flag binds at backend init)
+    for n in SHARDED_DEVICE_COUNTS:
+        us = _run_sharded_worker(n)
+        derived = ("single-device fallback (mesh of 1)" if n == 1 else
+                   f"shard_map+psum, {N_CLIENTS // n} client rows/shard")
+        report(f"federation/sharded_round_{n}dev_{scale}", us, derived)
+
+
+# ---------------------------------------------------------------------------
+# client-axis-sharded section
+# ---------------------------------------------------------------------------
+
+SHARDED_DEVICE_COUNTS = (1, 2, 4, 8)
+
+
+def _run_sharded_worker(n_devices: int) -> float:
+    from repro.launch.mesh import forced_device_env
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = forced_device_env(n_devices, [os.path.join(root, "src")])
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.federation_bench",
+         "--sharded-worker", str(n_devices)],
+        env=env, cwd=root, capture_output=True, text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded worker ({n_devices} dev) failed:\n{proc.stdout}\n"
+            f"{proc.stderr}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("SHARDED_US="):
+            return float(line.split("=", 1)[1])
+    raise RuntimeError(f"sharded worker emitted no SHARDED_US line:\n"
+                       f"{proc.stdout}")
+
+
+def _sharded_worker_main(n_devices: int) -> None:
+    from repro.launch.mesh import make_federation_mesh
+    assert jax.device_count() == n_devices, \
+        f"worker saw {jax.device_count()} devices, wanted {n_devices}"
+    groups, params, _, weights, labels = _round_inputs()
+    mesh = make_federation_mesh(n_devices)
+    plans = {}
+    us = _bench(lambda: federate_client_params(
+        groups, params, weights, labels, n_layers=N_LAYERS,
+        plan_cache=plans, mesh=mesh), iters=3)
+    print(f"SHARDED_US={us}", flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded-worker", type=int, default=None,
+                    metavar="N_DEVICES")
+    args = ap.parse_args()
+    if args.sharded_worker is not None:
+        _sharded_worker_main(args.sharded_worker)
+    else:
+        run(lambda name, v, d="": print(f"{name},{v:.3f},{d}"))

@@ -12,10 +12,13 @@ Sections:
   ablation   — paper Table 23 (component ablation)
   roofline   — derived roofline terms from results/dryrun.jsonl (if present)
 
-``--json PATH`` additionally writes the report rows as a
-``BENCH_*.json``-compatible dict: ``{"meta": {...}, "results":
-{name: {"us_per_call": float, "derived": str}}}`` — the perf
-trajectory file tracked from PR 1 onward.
+``--json PATH`` additionally records the report rows as one snapshot
+``{"meta": {...}, "results": {name: {"us_per_call": float, "derived":
+str}}}`` *appended* to a ``{"history": [snapshot, ...]}`` trajectory
+at PATH — repeat runs accumulate instead of overwriting, so
+``results/bench_federation.json`` et al. carry the perf trajectory
+across PRs. A pre-trajectory single-snapshot file is absorbed as the
+first history entry.
 """
 from __future__ import annotations
 
@@ -89,7 +92,7 @@ def main() -> None:
     print(f"# total wall: {wall:.1f}s", file=sys.stderr)
 
     if args.json:
-        out = {
+        snapshot = {
             "meta": {
                 "argv": sys.argv[1:],
                 "sections": sections,
@@ -100,13 +103,32 @@ def main() -> None:
                                     "derived": r["derived"]}
                         for r in rows},
         }
+        history = []
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    prev = json.load(f)
+                if isinstance(prev, dict) and \
+                        isinstance(prev.get("history"), list):
+                    history = prev["history"]
+                elif isinstance(prev, dict) and "results" in prev:
+                    # pre-trajectory files were a bare snapshot dict
+                    history = [prev]
+                else:
+                    raise TypeError("not a snapshot/trajectory")
+            except (OSError, json.JSONDecodeError, TypeError):
+                print(f"# {args.json} unreadable, starting a fresh "
+                      "trajectory", file=sys.stderr)
+        history.append(snapshot)
+        out = {"history": history}
         d = os.path.dirname(args.json)
         if d:
             os.makedirs(d, exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
             f.write("\n")
-        print(f"# json report: {args.json}", file=sys.stderr)
+        print(f"# json report: {args.json} ({len(history)} snapshots)",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

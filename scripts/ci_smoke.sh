@@ -6,7 +6,25 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# Sharded suite excluded here: it reruns inline below under the forced
+# device count (running it in this invocation too would pay each check
+# twice, once per-test via 8-device subprocesses).
+python -m pytest -x -q --ignore=tests/test_federation_sharded.py
+
+# Multi-device suite, second invocation: the forced host-device count
+# binds at backend init, so the sharded federation tests get their own
+# pytest process with 8 CPU devices (the multihost fixture then runs
+# its checks inline instead of via per-test subprocesses). Any
+# caller-supplied device-count flag is stripped first (the last
+# duplicate wins in XLA's flag parsing; `|| true` because grep -v
+# "selected nothing" exits 1 under pipefail), and the platform is
+# pinned to cpu so accelerator hosts still get the forced CPU pool —
+# the sh twin of repro.launch.mesh.forced_device_env.
+CI_XLA_FLAGS=$(echo "${XLA_FLAGS:-}" | tr ' ' '\n' \
+    | { grep -v -- --xla_force_host_platform_device_count || true; } \
+    | tr '\n' ' ')
+XLA_FLAGS="--xla_force_host_platform_device_count=8 ${CI_XLA_FLAGS}" \
+    JAX_PLATFORMS=cpu python -m pytest -x -q tests/test_federation_sharded.py
 
 mkdir -p results
 python -m benchmarks.run --only kernels --json results/bench_kernels.json

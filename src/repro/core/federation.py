@@ -23,6 +23,19 @@ jitted computation, one Pallas ``clustered_agg`` call per net when
 cached on the plan so repeat rounds do zero host-side tree walking.
 The original quadruple loop (net x layer x cluster x member) is kept
 as the correctness oracle behind ``fused=False``.
+
+Sharded round (DESIGN.md §Sharded federation): with ``mesh=`` given,
+``theta``'s client (row) axis shards over the mesh's ('pod', 'data')
+axes — the same "rows" placement as every population-batch tensor —
+and the ``A @ theta`` cluster reduction runs as a ``shard_map``-ed
+local partial-sum (the Pallas ``clustered_agg`` kernel on each
+shard's row block) followed by a ``psum`` over the client axis, so
+every host ends the collective holding the replicated ``[S, D]``
+cluster means and ``_unflatten`` stays local. When the client count
+is not divisible by the mesh (``sharding.policy.client_axes``'s
+sanitize fallback) or the mesh has one device, the plan silently
+uses the single-device path; ``mesh=None`` (the default) is that
+path byte-for-byte.
 """
 from __future__ import annotations
 
@@ -32,8 +45,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.splitting import ProfileGroup, client_owned_layers, layer_pair
+from repro.sharding.policy import client_axes
 
 # Segment-count padding: round the number of (layer, cluster) blocks up
 # so A's leading dim takes few distinct values (bounds jit retraces as
@@ -100,12 +116,21 @@ class FederationPlan:
     Built once from a template of the client params; repeat rounds
     reuse the cached treedefs/shapes/offsets and the jitted aggregate
     functions (retraced only when the segment count changes).
+
+    ``mesh``: client-axis sharding for the round. The ``[K, D]``
+    buffer's rows shard over the mesh's ('pod', 'data') axes and the
+    reduction becomes a shard_map partial-sum + psum; falls back to
+    the single-device path when K is not divisible by the mesh (or
+    the mesh is trivial). Plans are cached per mesh identity — see
+    ``get_federation_plan``.
     """
 
     def __init__(self, groups: Sequence[ProfileGroup], net: str,
-                 n_layers: int, template: Dict[str, Dict[str, Any]]):
+                 n_layers: int, template: Dict[str, Dict[str, Any]],
+                 mesh: Optional[Mesh] = None):
         self.net = net
         self.n_layers = n_layers
+        self.mesh = mesh
         # rows: one per client copy, groups in canonical order
         self._group_rows: Dict[str, Tuple[int, int]] = {}
         self.row_cids: List[int] = []
@@ -172,6 +197,11 @@ class FederationPlan:
         self._owned = owned
         self._groups_order = [g.name for g in groups]
         self._agg_fns: Dict[Tuple[bool, bool], Callable] = {}
+        # client-axis placement: the divisibility-aware sanitize drops
+        # the axes (-> None -> single-device path) when K % mesh != 0
+        # or the mesh axes multiply to 1.
+        self._client_axes = (None if mesh is None or self.n_rows == 0
+                             else client_axes(mesh, self.n_rows))
 
     # -- host-side weight matrix (Eq. 15/16 block diagonal) ----------------
     def weight_segments(self, weights: np.ndarray, cluster_labels: np.ndarray
@@ -248,14 +278,52 @@ class FederationPlan:
         return out
 
     # -- the jitted round --------------------------------------------------
-    def _make_agg_fn(self, use_kernel: bool, donate: bool) -> Callable:
-        def fn(net_params, A, seg_ids):
-            theta = self._flatten(net_params)
+    def _reduce_fn(self, use_kernel: bool) -> Callable:
+        """(A [S, K], theta [K, D]) -> replicated agg [S, D] f32."""
+        if self._client_axes is None:
+            # single-device / fallback path: one full-K contraction.
+            def reduce(A, theta):
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    return kops.clustered_agg(A, theta)
+                return A @ theta
+            return reduce
+
+        # Sharded path: theta rows and A columns split over the client
+        # axis; each shard contracts its local row block (the Pallas
+        # kernel runs per-shard) into a partial [S, D], and one psum
+        # over the client axis leaves the full cluster means replicated
+        # on every host — S*D is tiny next to K*D, and _unflatten's
+        # seg_ids gather needs every segment row locally, so a
+        # psum_scatter would only defer the same all-gather (DESIGN.md
+        # §Sharded federation).
+        axes = self._client_axes
+        axis_names = (axes,) if isinstance(axes, str) else tuple(axes)
+
+        def local_partial(a_blk, theta_blk):
             if use_kernel:
                 from repro.kernels import ops as kops
-                agg = kops.clustered_agg(A, theta)
+                part = kops.clustered_agg(a_blk, theta_blk)
             else:
-                agg = A @ theta
+                part = a_blk @ theta_blk
+            return jax.lax.psum(part.astype(jnp.float32), axis_names)
+
+        # check_rep=False: pallas_call has no shard_map replication
+        # rule; the out_spec below is still fully replicated (psum).
+        return shard_map(local_partial, mesh=self.mesh,
+                         in_specs=(P(None, axes), P(axes, None)),
+                         out_specs=P(None, None), check_rep=False)
+
+    def _make_agg_fn(self, use_kernel: bool, donate: bool) -> Callable:
+        reduce = self._reduce_fn(use_kernel)
+        theta_sharding = (None if self._client_axes is None else
+                          NamedSharding(self.mesh, P(self._client_axes, None)))
+
+        def fn(net_params, A, seg_ids):
+            theta = self._flatten(net_params)
+            if theta_sharding is not None:
+                theta = jax.lax.with_sharding_constraint(theta, theta_sharding)
+            agg = reduce(A, theta)
             return self._unflatten(agg, seg_ids)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
@@ -274,10 +342,15 @@ _PLAN_CACHE: Dict[Tuple, FederationPlan] = {}
 
 
 def _plan_key(groups: Sequence[ProfileGroup], net: str, n_layers: int,
-              template: Dict[str, Dict[str, Any]]) -> Tuple:
+              template: Dict[str, Dict[str, Any]],
+              mesh: Optional[Mesh] = None) -> Tuple:
     # The leaf-layout fingerprint guards the shared cache against two
     # same-topology populations with differently-shaped layer params
     # (walking ~100 aval objects per round is noise next to the round).
+    # Mesh identity is part of the key: a plan bakes its shard_map /
+    # sharding constraints to one mesh, so the same topology on a
+    # different mesh (or none) must get its own plan (jax.sharding.Mesh
+    # hashes by device assignment + axis names).
     layout = tuple(
         (g.name, tuple(
             (l, tuple((tuple(x.shape), str(x.dtype)) for x in
@@ -286,17 +359,19 @@ def _plan_key(groups: Sequence[ProfileGroup], net: str, n_layers: int,
         for g in groups)
     return (net, n_layers, tuple(
         (g.name, g.cut.as_tuple(), tuple(g.client_ids)) for g in groups),
-        layout)
+        layout, mesh)
 
 
 def get_federation_plan(groups: Sequence[ProfileGroup], net: str,
                         n_layers: int,
                         template: Dict[str, Dict[str, Any]],
-                        plan_cache: Optional[Dict] = None) -> FederationPlan:
+                        plan_cache: Optional[Dict] = None,
+                        mesh: Optional[Mesh] = None) -> FederationPlan:
     cache = _PLAN_CACHE if plan_cache is None else plan_cache
-    key = _plan_key(groups, net, n_layers, template)
+    key = _plan_key(groups, net, n_layers, template, mesh)
     if key not in cache:
-        cache[key] = FederationPlan(groups, net, n_layers, template)
+        cache[key] = FederationPlan(groups, net, n_layers, template,
+                                    mesh=mesh)
     return cache[key]
 
 
@@ -316,7 +391,8 @@ def federate_client_params(groups: Sequence[ProfileGroup],
                            use_kernel: bool = False,
                            fused: bool = True,
                            plan_cache: Optional[Dict] = None,
-                           donate: Optional[bool] = None
+                           donate: Optional[bool] = None,
+                           mesh: Optional[Mesh] = None
                            ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Aggregate client-held layers cluster-wise.
 
@@ -331,6 +407,10 @@ def federate_client_params(groups: Sequence[ProfileGroup],
     afterwards (the trainer does; pass ``donate_default()``). The
     default never donates, so repeated calls on the same params are
     always valid.
+    mesh=Mesh(...) shards the flat client buffer's rows over the
+    mesh's ('pod', 'data') axes and reduces via shard_map partial-sums
+    + psum (see FederationPlan); ``None`` keeps today's single-device
+    path unchanged. Non-divisible client counts fall back silently.
     Returns a new client_params with aggregated copies broadcast back.
     """
     n_layers = n_layers or {"G": 5, "D": 5}
@@ -346,7 +426,7 @@ def federate_client_params(groups: Sequence[ProfileGroup],
     for net, n_lay in n_layers.items():
         template = {g.name: client_params[g.name][net] for g in groups}
         plan = get_federation_plan(groups, net, n_lay, template,
-                                   plan_cache=plan_cache)
+                                   plan_cache=plan_cache, mesh=mesh)
         if plan.n_rows == 0:
             continue
         A, seg_ids = plan.weight_segments(weights, cluster_labels)
@@ -412,7 +492,8 @@ def fedavg_uniform(groups: Sequence[ProfileGroup],
                    use_kernel: bool = False,
                    fused: bool = True,
                    plan_cache: Optional[Dict] = None,
-                   donate: Optional[bool] = None
+                   donate: Optional[bool] = None,
+                   mesh: Optional[Mesh] = None
                    ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Vanilla FedAvg (first two federation rounds, paper §4.5): the
     degenerate single-cluster case of the fused path — one global
@@ -422,4 +503,4 @@ def fedavg_uniform(groups: Sequence[ProfileGroup],
     return federate_client_params(groups, client_params, weights, labels,
                                   n_layers=n_layers, use_kernel=use_kernel,
                                   fused=fused, plan_cache=plan_cache,
-                                  donate=donate)
+                                  donate=donate, mesh=mesh)

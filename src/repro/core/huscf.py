@@ -176,9 +176,15 @@ class HuSCFTrainer:
                  cuts: Optional[Sequence[Cut]] = None,
                  config: HuSCFConfig = HuSCFConfig(),
                  server: DeviceProfile = PAPER_SERVER,
-                 ga_config: Optional[GAConfig] = None):
+                 ga_config: Optional[GAConfig] = None,
+                 fed_mesh: Optional[Any] = None):
+        # fed_mesh: jax Mesh for client-axis-sharded federation rounds
+        # (launch.mesh.make_federation_mesh); None = single-device path.
+        # A Mesh is a device-topology object, so it rides the trainer,
+        # not the (value-semantics) HuSCFConfig dataclass.
         self.clients = list(clients)
         self.cfg = config
+        self.fed_mesh = fed_mesh
         K = len(self.clients)
         if devices is None:
             devices = [PAPER_DEVICES[i % len(PAPER_DEVICES)] for i in range(K)]
@@ -371,8 +377,17 @@ class HuSCFTrainer:
             out[cid] = v
         return out
 
-    def federate(self, use_label_kld: bool = False) -> Dict[str, Any]:
-        """Stages 3+4. Returns diagnostics."""
+    _MESH_DEFAULT = object()     # sentinel: mesh=None must stay sayable
+
+    def federate(self, use_label_kld: bool = False,
+                 mesh: Any = _MESH_DEFAULT) -> Dict[str, Any]:
+        """Stages 3+4. Returns diagnostics.
+
+        mesh overrides the trainer's ``fed_mesh`` for this round
+        (client-axis-sharded aggregation); pass ``mesh=None``
+        explicitly to force the single-device path on a trainer that
+        has a ``fed_mesh``. Omitted = trainer default."""
+        mesh = self.fed_mesh if mesh is self._MESH_DEFAULT else mesh
         self.fed_round += 1
         if self.fed_round <= self.cfg.warmup_fed_rounds:
             for net in ("G", "D"):
@@ -384,7 +399,7 @@ class HuSCFTrainer:
                                      n_layers={net: 5},
                                      use_kernel=self.cfg.use_kernel,
                                      plan_cache=self._fed_plans,
-                                     donate=donate_default())
+                                     donate=donate_default(), mesh=mesh)
                 self.state[net]["client"] = {g.name: out[g.name][net]
                                              for g in self.groups}
             return {"round": self.fed_round, "mode": "fedavg"}
@@ -407,7 +422,7 @@ class HuSCFTrainer:
                                          cl.labels, n_layers={net: 5},
                                          use_kernel=self.cfg.use_kernel,
                                          plan_cache=self._fed_plans,
-                                         donate=donate_default())
+                                         donate=donate_default(), mesh=mesh)
             self.state[net]["client"] = {g.name: out[g.name][net]
                                          for g in self.groups}
         return {"round": self.fed_round, "mode": "clustered",

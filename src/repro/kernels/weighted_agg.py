@@ -26,6 +26,15 @@ MXU/VPU — arithmetic intensity is low (streaming reduction), so the
 kernel is HBM-bandwidth-bound and the tiling keeps aligned 2D tiles
 streaming through VMEM exactly once.
 
+Sharded rounds (repro.core.federation, ``mesh=``) invoke the same
+kernel *per shard* inside a ``shard_map`` over the client axis: each
+device's block sees only its local ``[K/n, D]`` row slice of theta
+(and the matching ``[S, K/n]`` column slice of ``W``), computes the
+local partial aggregate, and the cross-device ``psum`` happens outside
+the kernel — the kernel body is oblivious to the mesh, K is simply
+smaller.  (shard_map needs ``check_rep=False`` around pallas_call;
+the caller handles that.)
+
 ``block_tiles`` groups several (8, 1024) tiles into one grid step.  On
 real TPU keep the default of 1 (a [K, 8, 1024] block per step fits
 VMEM); in interpret mode (the CPU oracle path) the emulator pays a

@@ -24,6 +24,56 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_federation_mesh(n_devices: int | None = None):
+    """1-D ``('data',)`` mesh over the first ``n_devices`` visible
+    devices, for client-axis-sharded federation rounds
+    (core/federation.py, mesh= argument).
+
+    Usable on forced-multi-device CPU: a process started with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` can build
+    federation meshes of 1/2/4/8 devices from the same pool (the tests
+    and the sharded bench section do exactly this). ``None`` takes
+    every visible device.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"requested {n} devices, have {len(devs)} "
+                         "(force more with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    return Mesh(np.asarray(devs[:n]), ("data",))
+
+
+def forced_device_env(n_devices: int, pythonpath_prepend=()):
+    """Subprocess environment that forces ``n_devices`` host CPU
+    devices — the one shared recipe behind the multi-device test
+    harness (tests/conftest.py ``multihost``) and the sharded bench
+    workers (benchmarks/federation_bench.py).
+
+    Replaces any existing ``--xla_force_host_platform_device_count``
+    rather than prepending (the last duplicate wins XLA's flag
+    parsing), and pins ``JAX_PLATFORMS=cpu`` so a GPU/TPU host still
+    gives the child the forced CPU pool the flag describes. Entries in
+    ``pythonpath_prepend`` go ahead of the inherited PYTHONPATH.
+    """
+    import os
+
+    env = dict(os.environ)
+    keep = [f for f in env.get("XLA_FLAGS", "").split()
+            if "--xla_force_host_platform_device_count" not in f]
+    env["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={int(n_devices)}"] + keep)
+    env["JAX_PLATFORMS"] = "cpu"
+    if pythonpath_prepend:
+        prev = env.get("PYTHONPATH", "")
+        env["PYTHONPATH"] = os.pathsep.join(
+            list(pythonpath_prepend) + ([prev] if prev else []))
+    return env
+
+
 # hardware constants (TPU v5e) for the roofline analysis
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip

@@ -53,6 +53,20 @@ def sanitize(mesh, shape: Sequence[int], spec: Sequence) -> P:
     return P(*out)
 
 
+def client_axes(mesh, n_rows: int):
+    """Mesh axes to shard a leading client/population axis over, or None.
+
+    The stacked-client ("rows") axis shards over the data axes
+    ('pod', 'data') only when their product evenly divides ``n_rows``
+    (sanitize's divisibility fallback) — a ragged split would leave
+    shards with unequal row counts, which the federation round's
+    shard_map partial-sum cannot express. Returns the sanitize-style
+    spec entry: an axis name, a tuple of axis names, or None (no
+    sharding — callers fall back to the single-device path).
+    """
+    return sanitize(mesh, (n_rows,), (data_axes(mesh),))[0]
+
+
 # parameter-name -> trailing-dims spec (DP = fsdp data axes, MP = model)
 # entries use 'DP' / 'MP' placeholders resolved against the mesh.
 _PARAM_RULES: Dict[str, Tuple] = {

@@ -85,11 +85,49 @@ def test_weighted_agg_is_single_segment_case():
 @pytest.mark.parametrize("N", [1, 100, 257])
 @pytest.mark.parametrize("M", [2, 6])
 @pytest.mark.parametrize("D", [32, 300])
-def test_kmeans_assign_sweep(N, M, D):
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kmeans_assign_sweep(N, M, D, dtype):
+    """Oracle sweep mirroring the clustered_agg shape/dtype sweeps: N
+    crossing the 128-row tile (1 / sub-tile / non-multiple), D far from
+    any lane multiple, both f32 and bf16 inputs (centers scaled x3 so
+    assignments are decisive under bf16 rounding)."""
     key = jax.random.PRNGKey(N + M + D)
-    x = jax.random.normal(key, (N, D))
-    c = jax.random.normal(jax.random.PRNGKey(1), (M, D)) * 3
+    x = jax.random.normal(key, (N, D), dtype)
+    c = jax.random.normal(jax.random.PRNGKey(1), (M, D), dtype) * 3
     got = kmeans_assign(x, c, interpret=True)
+    want = ref.kmeans_assign_ref(x, c)
+    assert got.dtype == jnp.int32 and got.shape == (N,)
+    assert bool(jnp.all(got == want))
+
+
+def test_kmeans_assign_single_center():
+    """M=1 degenerates to the constant assignment."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (70, 48))
+    c = jax.random.normal(jax.random.PRNGKey(1), (1, 48))
+    got = kmeans_assign(x, c, interpret=True)
+    assert bool(jnp.all(got == 0))
+    assert bool(jnp.all(got == ref.kmeans_assign_ref(x, c)))
+
+
+def test_kmeans_assign_exact_ties_pick_lowest_index():
+    """Duplicated center rows produce exact distance ties; argmin must
+    resolve to the first occurrence, identically in kernel and oracle
+    (the kernel drops the ||x||^2 term — ties must survive that)."""
+    c_base = jax.random.normal(jax.random.PRNGKey(2), (3, 64)) * 2
+    c = jnp.concatenate([c_base, c_base[::-1]], axis=0)   # rows 0..2 == 5..3
+    x = c_base + 0.01 * jax.random.normal(jax.random.PRNGKey(3), (3, 64))
+    got = kmeans_assign(x, c, interpret=True)
+    want = ref.kmeans_assign_ref(x, c)
+    assert bool(jnp.all(got == want))
+    assert bool(jnp.all(got == jnp.arange(3)))   # first of each dup pair
+
+
+def test_kmeans_assign_jitted_op():
+    """The jitted public wrapper (ops.kmeans_assign) matches the oracle
+    — the path the clustering stage actually calls."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (200, 96))
+    c = jax.random.normal(jax.random.PRNGKey(5), (5, 96)) * 3
+    got = ops.kmeans_assign(x, c)
     want = ref.kmeans_assign_ref(x, c)
     assert bool(jnp.all(got == want))
 
