@@ -7,6 +7,8 @@ Sections:
   latency    — paper Tables 15/16/24/27 (analytic, exact reproduction)
   kernels    — Pallas kernel micro-benches
   federation — fused vs legacy Eq.-16 federation round (32 clients)
+  train      — scan-fused device-resident epochs vs per-step loop
+               (``--train-tiny`` shrinks to the 2-client CI config)
   quality    — paper Tables 6-13 analogue on synthetic multi-domain data
   kld        — paper Table 17 (activation vs label KLD)
   ablation   — paper Table 23 (component ablation)
@@ -36,6 +38,8 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single section")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a BENCH_*.json dict")
+    ap.add_argument("--train-tiny", action="store_true",
+                    help="train section at 2 clients x 2 steps (CI smoke)")
     args = ap.parse_args()
 
     rows = []
@@ -45,8 +49,8 @@ def main() -> None:
                      "derived": derived})
         print(f"{name},{value:.3f},{derived}", flush=True)
 
-    sections = ["latency", "kernels", "federation", "quality", "kld",
-                "ablation", "roofline"]
+    sections = ["latency", "kernels", "federation", "train", "quality",
+                "kld", "ablation", "roofline"]
     if args.only:
         sections = [args.only]
 
@@ -61,6 +65,9 @@ def main() -> None:
     if "federation" in sections:
         from benchmarks import federation_bench
         federation_bench.run(_report)
+    if "train" in sections:
+        from benchmarks import train_bench
+        train_bench.run(_report, tiny=args.train_tiny)
     if "quality" in sections:
         from benchmarks import quality_scenarios
         quality_scenarios.run(_report, fast=not args.full)

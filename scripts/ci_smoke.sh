@@ -29,4 +29,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8 ${CI_XLA_FLAGS}" \
 mkdir -p results
 python -m benchmarks.run --only kernels --json results/bench_kernels.json
 
+# Scan-fused training-epoch bench, tiny config (2 clients x 2 steps):
+# keeps the train_bench path compiling/running and appends the result
+# to the results/ perf trajectory.
+python -m benchmarks.run --only train --train-tiny \
+    --json results/bench_train.json
+
 echo "ci_smoke: OK"

@@ -35,13 +35,17 @@ from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, 
 from repro.core.splitting import (ProfileGroup, group_by_profile, layer_pair,
                                   server_union_span)
 from repro.data.partition import ClientSpec
+from repro.data.pipeline import sample_batch, stage_clients
 from repro.sharding.policy import maybe_shard
 from repro.models import gan
-from repro.models.gan import (DISC_LAYER_DEFS, DISC_MIDDLE, GEN_LAYER_DEFS,
+from repro.models.gan import (DISC_LAYER_DEFS, DISC_MIDDLE,
+                              DISC_MIDDLE_FEATURES, GEN_LAYER_DEFS,
                               Z_DIM, d_loss_fn, g_loss_fn)
 from repro.optim import adam
 
 Array = jnp.ndarray
+
+_EMA_DECAY = 0.8                     # middle-activation EMA (stage 3 input)
 
 
 @dataclasses.dataclass
@@ -56,6 +60,14 @@ class HuSCFConfig:
     use_kernel: bool = False         # Pallas weighted_agg for aggregation
     steps_per_epoch: Optional[int] = None
     warmup_fed_rounds: int = 2       # vanilla FedAvg rounds (paper §4.5)
+    fused_epoch: bool = True         # scan-fused device-resident epochs;
+    #                                  False = per-step loop (oracle)
+    epoch_unroll: Optional[int] = None
+    # scan unroll for the fused epoch. None = backend auto: full unroll
+    # on CPU (XLA:CPU only multithreads the entry computation, so a
+    # while-loop body runs its convs single-threaded — measured ~2.3x
+    # per-step wall on 2 cores), 1 (true scan, O(1) compile) on
+    # TPU/GPU where the loop body parallelizes fine.
 
 
 # ---------------------------------------------------------------------------
@@ -164,6 +176,45 @@ def build_net_apply(groups: Sequence[ProfileGroup], net: str,
     return apply
 
 
+def make_epoch_fn(groups: Sequence[ProfileGroup], step_core: Callable,
+                  sample: Callable, n_steps: int,
+                  unroll: int = 1) -> Callable:
+    """The scan-fused device-resident epoch (DESIGN.md §Device-resident
+    epochs), shared by the trainer and the production-mesh dry-run so
+    the lowered computation cannot drift from the one that trains.
+
+    ``step_core(state, batch) -> (state, metrics, mids)`` with ``mids``
+    the per-group ``[K_p, F]`` middle-activation batch means;
+    ``sample(dataset, key) -> batch``. Returns
+    ``epoch(state, dataset, key, ema, ema_init)`` scanning the carry
+    ``(state, rng, mid_ema [K, F], ema_init)`` for ``n_steps``.
+    """
+    rows = {g.name: jnp.asarray(g.client_ids, jnp.int32) for g in groups}
+
+    def epoch(state, dataset, key, ema, ema_init):
+        def body(carry, _):
+            state, key, ema, ema_init = carry
+            key, ks = jax.random.split(key)
+            state, metrics, mids = step_core(state, sample(dataset, ks))
+            # middle-activation EMA lives in the carry as one [K, F]
+            # array — no per-step device->host sync; it is read back
+            # once per epoch for stage-3 clustering.
+            for g in groups:
+                m = mids[g.name].astype(jnp.float32)
+                prev = ema[rows[g.name]]
+                ema = ema.at[rows[g.name]].set(
+                    jnp.where(ema_init,
+                              _EMA_DECAY * prev + (1 - _EMA_DECAY) * m, m))
+            return (state, key, ema, jnp.ones((), jnp.bool_)), metrics
+
+        (state, key, ema, ema_init), metrics = jax.lax.scan(
+            body, (state, key, ema, ema_init), None, length=n_steps,
+            unroll=unroll)
+        return state, key, ema, ema_init, metrics
+
+    return epoch
+
+
 # ---------------------------------------------------------------------------
 # trainer
 # ---------------------------------------------------------------------------
@@ -209,11 +260,32 @@ class HuSCFTrainer:
         key = jax.random.PRNGKey(config.seed)
         self.state = self._init_state(key)
         self._rng = np.random.default_rng(config.seed + 1)
+        # device-resident data: every group's client rows staged once
+        # (padded + valid counts); batches are drawn inside the jitted
+        # step from the training PRNG key, so epochs never touch host
+        # numpy. With a fed_mesh the rows shard over its client axes
+        # and the rest of the training state replicates onto the same
+        # device set (one mesh for step + federation).
+        self._dataset = stage_clients(self.groups, self.clients,
+                                      mesh=fed_mesh)
+        self._train_key = jax.random.PRNGKey(config.seed + 1)
+        self._mid_ema = jnp.zeros((K, DISC_MIDDLE_FEATURES), jnp.float32)
+        self._ema_init = jnp.zeros((), jnp.bool_)
+        if fed_mesh is not None and fed_mesh.devices.size > 1:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(fed_mesh, P())
+            put = functools.partial(jax.device_put, device=rep)
+            self.state = jax.tree_util.tree_map(put, self.state)
+            self._train_key = put(self._train_key)
+            self._mid_ema = put(self._mid_ema)
+            self._ema_init = put(self._ema_init)
         # fused-federation plans (treedefs/leaf shapes/layer offsets),
         # built on first round and reused so repeat rounds pay zero
         # host-side tree walking.
         self._fed_plans: Dict = {}
+        self._step_core = self._build_step_core()
         self._step_fn = self._build_step()
+        self._epoch_fns: Dict[int, Callable] = {}
         self._gen_fn = None
         self.fed_round = 0
         self.epoch = 0
@@ -256,8 +328,8 @@ class HuSCFTrainer:
                 "opt_g": opt_init_g(g_params), "opt_d": opt_init_d(d_params),
                 "step": jnp.zeros((), jnp.int32)}
 
-    # -- one training step (jitted) ----------------------------------------
-    def _build_step(self) -> Callable:
+    # -- one training step (pure body, shared by both epoch paths) ---------
+    def _build_step_core(self) -> Callable:
         gen_apply = build_net_apply(self.groups, "G")
         disc_apply = build_net_apply(self.groups, "D", capture_middle=True)
         groups = self.groups
@@ -323,39 +395,70 @@ class HuSCFTrainer:
             metrics = {"loss_d": loss_d, "loss_g": loss_g}
             return new_state, metrics, mids
 
-        return jax.jit(step)
+        return step
 
-    # -- host-side data assembly -------------------------------------------
-    def _sample_batch(self) -> Dict[str, Dict[str, np.ndarray]]:
-        b = self.cfg.batch
-        batch = {"real_img": {}, "real_y": {}, "z": {}, "fake_y": {}}
-        for g in self.groups:
-            imgs, ys = [], []
-            for cid in g.client_ids:
-                spec = self.clients[cid]
-                idx = self._rng.integers(0, spec.n, b)
-                imgs.append(spec.images[idx])
-                ys.append(spec.labels[idx])
-            batch["real_img"][g.name] = np.stack(imgs)
-            batch["real_y"][g.name] = np.stack(ys)
-            batch["z"][g.name] = self._rng.normal(
-                0, 1, (g.size, b, Z_DIM)).astype(np.float32)
-            batch["fake_y"][g.name] = self._rng.integers(
-                0, gan.NUM_CLASSES, (g.size, b)).astype(np.int32)
-        return batch
+    # -- on-device batch sampling ------------------------------------------
+    def _sample(self, dataset, key):
+        """One batch drawn on device from the staged dataset — shared
+        by the per-step oracle and the scan body so both paths consume
+        the identical PRNG stream."""
+        return sample_batch(dataset, key, batch=self.cfg.batch,
+                            z_dim=Z_DIM, num_classes=gan.NUM_CLASSES)
+
+    # -- per-step path (correctness oracle, fused_epoch=False) -------------
+    def _build_step(self) -> Callable:
+        core = self._step_core
+        sample = self._sample
+
+        def step(state, dataset, key):
+            key, ks = jax.random.split(key)
+            new_state, metrics, mids = core(state, sample(dataset, ks))
+            return new_state, key, metrics, mids
+
+        # the trainer replaces self.state right after every call, so the
+        # old params/Adam buffers may alias into the update in place
+        # (TPU/GPU; CPU XLA ignores donation).
+        return jax.jit(step,
+                       donate_argnums=(0,) if donate_default() else ())
+
+    def _epoch_unroll(self, n_steps: int) -> int:
+        if self.cfg.epoch_unroll is not None:
+            return max(1, min(n_steps, self.cfg.epoch_unroll))
+        return n_steps if jax.default_backend() == "cpu" else 1
+
+    # -- scan-fused device-resident epoch (fused_epoch=True) ---------------
+    def _build_epoch(self, n_steps: int) -> Callable:
+        epoch = make_epoch_fn(self.groups, self._step_core, self._sample,
+                              n_steps, unroll=self._epoch_unroll(n_steps))
+        # donate the carry's state + EMA so Adam/param buffers update in
+        # place across the whole epoch (the dataset argument is
+        # read-only and must not be donated)
+        return jax.jit(epoch,
+                       donate_argnums=(0, 3) if donate_default() else ())
 
     # -- public API ----------------------------------------------------------
     def train_steps(self, n_steps: int) -> Dict[str, float]:
+        if self.cfg.fused_epoch:
+            fn = self._epoch_fns.get(n_steps)
+            if fn is None:
+                fn = self._epoch_fns[n_steps] = self._build_epoch(n_steps)
+            (self.state, self._train_key, self._mid_ema, self._ema_init,
+             metrics) = fn(self.state, self._dataset, self._train_key,
+                           self._mid_ema, self._ema_init)
+            return {k: float(v[-1]) for k, v in metrics.items()}
+        # oracle: one dispatch per step, blocking mid-activation
+        # readback + per-client Python EMA each step
         last = {}
         for _ in range(n_steps):
-            batch = self._sample_batch()
-            self.state, metrics, mids = self._step_fn(self.state, batch)
+            self.state, self._train_key, metrics, mids = self._step_fn(
+                self.state, self._dataset, self._train_key)
             for g in self.groups:
                 m = np.asarray(mids[g.name])
                 for pos, cid in enumerate(g.client_ids):
                     prev = self._mid_acc.get(cid)
-                    self._mid_acc[cid] = (m[pos] if prev is None
-                                          else 0.8 * prev + 0.2 * m[pos])
+                    self._mid_acc[cid] = (
+                        m[pos] if prev is None
+                        else _EMA_DECAY * prev + (1 - _EMA_DECAY) * m[pos])
             last = {k: float(v) for k, v in metrics.items()}
         return last
 
@@ -370,6 +473,16 @@ class HuSCFTrainer:
         return metrics
 
     def middle_activations(self) -> np.ndarray:
+        if self.cfg.fused_epoch:
+            if not bool(self._ema_init):
+                # fail as loudly as the oracle path's empty-dict lookup
+                # would — an all-zero EMA would cluster degenerately
+                raise RuntimeError(
+                    "middle_activations() before any training step: "
+                    "the fused-epoch EMA is empty")
+            # the EMA lives on device in the scan carry; this is the
+            # one device->host readback per epoch (stage-3 clustering)
+            return np.asarray(self._mid_ema)
         K = len(self.clients)
         feat = next(iter(self._mid_acc.values()))
         out = np.zeros((K,) + feat.shape, np.float32)
@@ -443,27 +556,38 @@ class HuSCFTrainer:
                     False)
                 return out
             self._gen_fn = jax.jit(gen)
+        labels = np.asarray(labels)
+        n_total = len(labels)
         imgs_all, labels_all = [], []
-        i = 0
-        while i < len(labels):
+        pos = 0
+        while pos < n_total:
+            # each group consumes the next contiguous label chunk (a
+            # shared cursor, not a shared window — groups must not
+            # recycle each other's labels); only the final partial
+            # chunk pads, and the padding is sliced off below.
             z, y = {}, {}
-            take = {}
+            cursor = pos
             for g in self.groups:
-                need = min(n_per_client_batch, max(1, (len(labels) - i)
+                need = min(n_per_client_batch, max(1, (n_total - pos)
                                                    // max(1, g.size)))
-                lab = np.resize(labels[i:], (g.size, need)).astype(np.int32)
+                cnt = g.size * need
+                chunk = labels[cursor:cursor + cnt]
+                if chunk.shape[0] < cnt:
+                    chunk = np.concatenate(
+                        [chunk, np.zeros(cnt - chunk.shape[0],
+                                         labels.dtype)])
+                cursor += cnt
                 z[g.name] = self._rng.normal(0, 1, (g.size, need, Z_DIM)
                                              ).astype(np.float32)
-                y[g.name] = lab
-                take[g.name] = lab
+                y[g.name] = chunk.reshape(g.size, need).astype(np.int32)
             out = self._gen_fn(self.state, z, y)
             for g in self.groups:
                 arr = np.asarray(out[g.name]).reshape(-1, 28, 28, 1)
                 imgs_all.append(arr)
-                labels_all.append(take[g.name].reshape(-1))
-                i += arr.shape[0]
-        imgs = np.concatenate(imgs_all)[: len(labels)]
-        labs = np.concatenate(labels_all)[: len(labels)]
+                labels_all.append(y[g.name].reshape(-1))
+            pos = cursor
+        imgs = np.concatenate(imgs_all)[:n_total]
+        labs = np.concatenate(labels_all)[:n_total]
         return imgs, labs
 
 

@@ -1,7 +1,10 @@
 from repro.data.synthetic import DOMAINS, NUM_CLASSES, make_dataset, make_class_balanced
-from repro.data.partition import ClientSpec, build_scenario, partition_domain, batches
+from repro.data.partition import (ClientSpec, build_scenario, padded_stack,
+                                  partition_domain, batches)
+from repro.data.pipeline import DeviceDataset, sample_batch, stage_clients
 from repro.data.tokens import lm_batches
 
 __all__ = ["DOMAINS", "NUM_CLASSES", "make_dataset", "make_class_balanced",
            "ClientSpec", "build_scenario", "partition_domain", "batches",
+           "padded_stack", "DeviceDataset", "sample_batch", "stage_clients",
            "lm_batches"]

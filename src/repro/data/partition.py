@@ -153,6 +153,28 @@ def build_scenario(name: str, *, num_clients: int = 100, base_size: int = 600,
     raise ValueError(f"unknown scenario {name}")
 
 
+def padded_stack(specs: Sequence[ClientSpec]
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack clients' datasets into padded per-client rows.
+
+    Returns (images [K, n_max, H, W, C] f32 zero-padded,
+    labels [K, n_max] int32 with ``-1`` sentinel padding,
+    counts [K] int32). The sentinel makes an out-of-range gather
+    observable — samplers must only draw indices below ``counts``
+    (see repro.data.pipeline).
+    """
+    k = len(specs)
+    n_max = max(s.n for s in specs)
+    images = np.zeros((k, n_max) + specs[0].images.shape[1:], np.float32)
+    labels = np.full((k, n_max), -1, np.int32)
+    counts = np.zeros(k, np.int32)
+    for i, s in enumerate(specs):
+        images[i, : s.n] = s.images
+        labels[i, : s.n] = s.labels
+        counts[i] = s.n
+    return images, labels, counts
+
+
 def batches(spec: ClientSpec, batch_size: int, rng: np.random.Generator):
     """Yield an epoch of shuffled batches (pads by wraparound)."""
     n = spec.n

@@ -1,0 +1,117 @@
+"""Device-resident data pipeline for the split-learning trainer.
+
+`DeviceDataset` stages every profile group's client datasets on device
+once — padded per-client rows plus valid counts — so training epochs
+never touch host numpy again: batches are drawn *inside* the jitted
+step (`sample_batch`) by `jax.random` gathers over on-device indices,
+and `jax.lax.scan` can fuse whole epochs into one dispatch
+(`repro.core.huscf`, DESIGN.md §Device-resident epochs).
+
+Layout per group (clients in the group's canonical order):
+  * images [K_p, n_max, H, W, C] f32 — rows zero-padded past each
+    client's ``n``
+  * labels [K_p, n_max] int32 — padding holds ``-1`` as a sentinel so
+    an out-of-bounds gather is detectable (tests assert labels >= 0)
+  * counts [K_p] int32 — the valid row count per client; samplers draw
+    indices in [0, counts[k]) so padding is never read
+
+With a mesh, rows stage sharded over the mesh's client axes
+(`sharding.policy.client_stack_sharding`): the same ('pod', 'data')
+placement as every population-batch tensor, with the usual
+divisibility fallback to replication.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.partition import ClientSpec, padded_stack
+from repro.sharding.policy import client_stack_sharding
+
+if TYPE_CHECKING:  # runtime import would cycle: repro.core imports
+    from repro.core.splitting import ProfileGroup  # repro.data (huscf)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceDataset:
+    """Per-group padded client rows, staged on device once.
+
+    A pytree (group order is static aux data), so it can be passed as
+    an argument to jitted step/epoch functions — keeping any mesh
+    shardings intact, which a closed-over constant would not.
+    """
+    order: Tuple[str, ...]
+    images: Dict[str, Any]     # gname -> [K_p, n_max, H, W, C] f32
+    labels: Dict[str, Any]     # gname -> [K_p, n_max] int32 (-1 pad)
+    counts: Dict[str, Any]     # gname -> [K_p] int32
+
+    def tree_flatten(self):
+        return (self.images, self.labels, self.counts), self.order
+
+    @classmethod
+    def tree_unflatten(cls, order, children):
+        return cls(order, *children)
+
+    @property
+    def n_clients(self) -> int:
+        return sum(int(c.shape[0]) for c in self.counts.values())
+
+
+def stage_clients(groups: Sequence["ProfileGroup"],
+                  clients: Sequence[ClientSpec],
+                  mesh: Optional[Any] = None) -> DeviceDataset:
+    """Pad + upload every group's client datasets. ``mesh`` shards the
+    leading client axis (replicates everything on the mesh's devices
+    when a group's size is not divisible) so the training step and the
+    federation round live on one device set."""
+    images, labels, counts = {}, {}, {}
+    order = tuple(g.name for g in groups)
+    for g in groups:
+        imgs, labs, cnt = padded_stack([clients[cid] for cid in g.client_ids])
+        if (cnt <= 0).any():
+            # fail as loudly as the host sampler's rng.integers(0, 0)
+            # did: randint(0, 0) yields index 0 and the gather would
+            # silently read the -1 sentinel padding
+            empty = [int(c) for c, n in zip(g.client_ids, cnt) if n <= 0]
+            raise ValueError(f"clients {empty} in group {g.name} have no "
+                             "samples — cannot stage an empty dataset")
+        if mesh is not None and mesh.devices.size > 1:
+            put = lambda x: jax.device_put(
+                x, client_stack_sharding(mesh, x.shape))
+        else:
+            put = jnp.asarray
+        images[g.name] = put(imgs)
+        labels[g.name] = put(labs)
+        counts[g.name] = put(cnt)
+    return DeviceDataset(order, images, labels, counts)
+
+
+def sample_batch(ds: DeviceDataset, key, *, batch: int, z_dim: int,
+                 num_classes: int) -> Dict[str, Dict[str, jnp.ndarray]]:
+    """Draw one training batch entirely on device (jit-safe).
+
+    Real rows are gathered by per-client indices drawn in
+    [0, counts[k]) — padding rows are unreachable by construction —
+    and z / fake_y come from the same threaded PRNG key. Group
+    subkeys fold in the staged group order, so the stream is a pure
+    function of (key, topology)."""
+    out: Dict[str, Dict[str, jnp.ndarray]] = {
+        "real_img": {}, "real_y": {}, "z": {}, "fake_y": {}}
+    gather = jax.vmap(lambda rows, ix: jnp.take(rows, ix, axis=0))
+    for i, name in enumerate(ds.order):
+        k_idx, k_z, k_y = jax.random.split(jax.random.fold_in(key, i), 3)
+        counts = ds.counts[name]
+        k_cl = counts.shape[0]
+        idx = jax.random.randint(k_idx, (k_cl, batch), 0, counts[:, None])
+        out["real_img"][name] = gather(ds.images[name], idx)
+        out["real_y"][name] = gather(ds.labels[name], idx)
+        out["z"][name] = jax.random.normal(k_z, (k_cl, batch, z_dim),
+                                           jnp.float32)
+        out["fake_y"][name] = jax.random.randint(k_y, (k_cl, batch), 0,
+                                                 num_classes, jnp.int32)
+    return out

@@ -94,9 +94,12 @@ def gan_state_struct(groups):
             "step": jax.ShapeDtypeStruct((), jnp.int32)}
 
 
-def build_gan_step(groups, batch: int, concat_groups: bool = True):
-    """One HuSCF-GAN train step (same math as HuSCFTrainer._build_step).
-    concat_groups=False is the beyond-paper no-concat server schedule."""
+def build_gan_step(groups, batch: int, concat_groups: bool = True,
+                   return_mids: bool = False):
+    """One HuSCF-GAN train step (same math as HuSCFTrainer's step core).
+    concat_groups=False is the beyond-paper no-concat server schedule.
+    return_mids additionally returns the per-group middle-activation
+    batch means (the scan-fused epoch's EMA input)."""
     gen_apply = build_net_apply(groups, "G", concat_groups=concat_groups)
     disc_apply = build_net_apply(groups, "D", capture_middle=True,
                                  concat_groups=concat_groups)
@@ -152,11 +155,52 @@ def build_gan_step(groups, batch: int, concat_groups: bool = True):
             g_loss, has_aux=True)(g_params)
         opt_g, g_new = upd_g(state["opt_g"], grads_g, g_params)
         g_new = _merge_bn(g_new, g_bn)
-        return {"G": g_new, "D": d_new, "opt_g": opt_g, "opt_d": opt_d,
-                "step": state["step"] + 1}, {"loss_d": loss_d,
-                                             "loss_g": loss_g}
+        new_state = {"G": g_new, "D": d_new, "opt_g": opt_g, "opt_d": opt_d,
+                     "step": state["step"] + 1}
+        metrics = {"loss_d": loss_d, "loss_g": loss_g}
+        if return_mids:
+            return new_state, metrics, mids
+        return new_state, metrics
 
     return step
+
+
+def build_gan_epoch(groups, batch: int, n_steps: int,
+                    concat_groups: bool = True):
+    """Scan-fused device-resident epoch (DESIGN.md §Device-resident
+    epochs) on dry-run structs: per-step on-device sampling from a
+    staged DeviceDataset plus the in-carry [K, F] middle-activation
+    EMA, `n_steps` steps in one dispatch. The scan body is the shared
+    `huscf.make_epoch_fn` — the lowering cannot drift from the trainer."""
+    from repro.core.huscf import make_epoch_fn
+    from repro.data.pipeline import sample_batch
+    from repro.models.gan import NUM_CLASSES
+
+    step = build_gan_step(groups, batch, concat_groups=concat_groups,
+                          return_mids=True)
+
+    def step_core(state, drawn):
+        return step(state, {"img": drawn["real_img"], "y": drawn["real_y"],
+                            "z": drawn["z"], "fy": drawn["fake_y"]})
+
+    def sample(dataset, key):
+        return sample_batch(dataset, key, batch=batch, z_dim=Z_DIM,
+                            num_classes=NUM_CLASSES)
+
+    return make_epoch_fn(groups, step_core, sample, n_steps)
+
+
+def gan_dataset_struct(groups, n_rows: int = 600):
+    """ShapeDtypeStruct DeviceDataset (padded client rows)."""
+    from repro.data.pipeline import DeviceDataset
+    images = {g.name: jax.ShapeDtypeStruct((g.size, n_rows, 28, 28, 1),
+                                           jnp.float32) for g in groups}
+    labels = {g.name: jax.ShapeDtypeStruct((g.size, n_rows), jnp.int32)
+              for g in groups}
+    counts = {g.name: jax.ShapeDtypeStruct((g.size,), jnp.int32)
+              for g in groups}
+    return DeviceDataset(tuple(g.name for g in groups), images, labels,
+                         counts)
 
 
 def gan_batch_struct(groups, batch, act_dtype=jnp.float32):
@@ -182,14 +226,18 @@ def _client_shardings(mesh, tree):
 
 
 def run_gan(multi_pod: bool, n_clients: int = 224, batch: int = 64,
-            concat_groups: bool = True, bf16_acts: bool = False
-            ) -> Dict[str, Any]:
+            concat_groups: bool = True, bf16_acts: bool = False,
+            scan_steps: int = 0) -> Dict[str, Any]:
+    """scan_steps > 0 lowers the scan-fused device-resident epoch
+    (on-device sampling + EMA carry) instead of one training step."""
+    if scan_steps > 0 and bf16_acts:
+        # the epoch samples its batches on device (f32, trainer
+        # parity); a silent f32 lowering must not masquerade as bf16
+        raise ValueError("--bf16 is not supported with --scan-steps: "
+                         "the device-resident epoch stages/samples f32")
     mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
     groups, ga = build_gan_population(n_clients, batch)
     state = gan_state_struct(groups)
-    batch_struct = gan_batch_struct(
-        groups, batch, jnp.bfloat16 if bf16_acts else jnp.float32)
-    step = build_gan_step(groups, batch, concat_groups=concat_groups)
 
     # shardings: client stacks + batch over data; server params replicated
     # (they are small convs) — the activations concat over clients*batch
@@ -210,14 +258,41 @@ def run_gan(multi_pod: bool, n_clients: int = 224, batch: int = 64,
         step=NamedSharding(mesh, P()), mu=state_sh["G"], nu=state_sh["G"])
     state_sh["opt_d"] = type(state["opt_d"])(
         step=NamedSharding(mesh, P()), mu=state_sh["D"], nu=state_sh["D"])
-    batch_sh = _client_shardings(mesh, batch_struct)
-
     policy = ShardingPolicy()
     with mesh, activation_sharding(mesh, policy):
-        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
-                     donate_argnums=(0,))
-        lowered = fn.lower(state, batch_struct)
-    meta = {"arch": "huscf-gan", "shape": f"train_b{batch}_K{n_clients}",
+        if scan_steps > 0:
+            from repro.models.gan import DISC_MIDDLE_FEATURES
+            from repro.sharding.policy import client_stack_sharding
+            K = sum(g.size for g in groups)
+            epoch = build_gan_epoch(groups, batch, scan_steps,
+                                    concat_groups=concat_groups)
+            ds = gan_dataset_struct(groups)
+            ds_sh = jax.tree_util.tree_map(
+                lambda l: client_stack_sharding(mesh, l.shape), ds)
+            rep = NamedSharding(mesh, P())
+            key_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            ema_s = jax.ShapeDtypeStruct((K, DISC_MIDDLE_FEATURES),
+                                         jnp.float32)
+            init_s = jax.ShapeDtypeStruct((), jnp.bool_)
+            fn = jax.jit(epoch,
+                         in_shardings=(state_sh, ds_sh, rep,
+                                       client_stack_sharding(mesh,
+                                                             ema_s.shape),
+                                       rep),
+                         donate_argnums=(0, 3))
+            lowered = fn.lower(state, ds, key_s, ema_s, init_s)
+            shape_name = f"epoch{scan_steps}_b{batch}_K{n_clients}"
+        else:
+            batch_struct = gan_batch_struct(
+                groups, batch, jnp.bfloat16 if bf16_acts else jnp.float32)
+            batch_sh = _client_shardings(mesh, batch_struct)
+            step = build_gan_step(groups, batch,
+                                  concat_groups=concat_groups)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state, batch_struct)
+            shape_name = f"train_b{batch}_K{n_clients}"
+    meta = {"arch": "huscf-gan", "shape": shape_name,
             "multi_pod": multi_pod, "kind": "paper-train",
             "chips": int(np.prod(list(dict(mesh.shape).values()))),
             "params": 3_018_182, "ga_latency_model_s": ga.latency,
@@ -290,6 +365,10 @@ def main(argv=None):
                     help="beyond-paper per-group server schedule")
     ap.add_argument("--bf16", action="store_true",
                     help="bf16 activations (beyond-paper)")
+    ap.add_argument("--scan-steps", type=int, default=0,
+                    help="lower a scan-fused device-resident epoch of N "
+                         "steps (on-device sampling + EMA carry) instead "
+                         "of a single step")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
     meshes = [False, True] if args.both_meshes else [args.multi_pod]
@@ -298,7 +377,7 @@ def main(argv=None):
         if not args.skip_gan:
             t0 = time.time()
             res = run_gan(mp, concat_groups=not args.no_concat,
-                          bf16_acts=args.bf16)
+                          bf16_acts=args.bf16, scan_steps=args.scan_steps)
             res["wall_s"] = round(time.time() - t0, 1)
             results.append(res)
             print(f"[paper-dryrun] huscf-gan x {'2pod' if mp else '1pod'}: "

@@ -28,17 +28,28 @@ def train_huscf_gan(args) -> None:
     from repro.core import HuSCFConfig, HuSCFTrainer, PAPER_DEVICES
     from repro.data import build_scenario
     from repro.checkpoint import save_checkpoint
+    from repro.launch.mesh import make_federation_mesh
 
     clients = build_scenario(args.scenario, num_clients=args.clients,
                              base_size=args.base_size, seed=args.seed)
     devices = [PAPER_DEVICES[i % 7] for i in range(args.clients)]
+    # one mesh for the whole trainer: the device-resident dataset rows
+    # and the federation buffer shard over the same client axis
+    # (make_federation_mesh is the single factory for both; a 1-device
+    # pool runs the unsharded path).
+    n_dev = args.fed_devices or jax.device_count()
+    fed_mesh = make_federation_mesh(n_dev) if n_dev > 1 else None
     tr = HuSCFTrainer(clients, devices,
                       config=HuSCFConfig(batch=args.batch,
                                          federate_every=args.federate_every,
                                          seed=args.seed,
-                                         use_kernel=args.use_kernel))
+                                         use_kernel=args.use_kernel,
+                                         fused_epoch=not args.per_step),
+                      fed_mesh=fed_mesh)
     print(f"[train] GA latency model: {tr.ga_latency:.2f}s/iter, "
-          f"{len(tr.groups)} profile groups")
+          f"{len(tr.groups)} profile groups, "
+          f"mesh={n_dev if fed_mesh is not None else 1}dev, "
+          f"{'per-step' if args.per_step else 'fused'} epochs")
     for ep in range(args.epochs):
         t0 = time.time()
         m = tr.train_epoch()
@@ -108,6 +119,13 @@ def main(argv=None):
                     help="use the reduced config (CPU-friendly)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="Pallas weighted_agg for federation")
+    ap.add_argument("--fed-devices", type=int, default=None,
+                    help="client-axis mesh size shared by the training "
+                         "step and federation (default: every visible "
+                         "device; 1 disables sharding)")
+    ap.add_argument("--per-step", action="store_true",
+                    help="per-step oracle loop instead of scan-fused "
+                         "device-resident epochs")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
     if args.arch == "huscf-gan":

@@ -39,6 +39,9 @@ GEN_LAYERS = 5
 DISC_LAYERS = 5
 GEN_MIDDLE = GEN_LAYERS // 2   # layer index that must live on the server
 DISC_MIDDLE = DISC_LAYERS // 2
+# flattened per-sample D middle activation (L2 output 7x7x128) — the
+# feature width of the clustering EMA carried through fused epochs
+DISC_MIDDLE_FEATURES = 7 * 7 * 128
 
 
 # ---------------------------------------------------------------------------

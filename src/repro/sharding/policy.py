@@ -67,6 +67,16 @@ def client_axes(mesh, n_rows: int):
     return sanitize(mesh, (n_rows,), (data_axes(mesh),))[0]
 
 
+def client_stack_sharding(mesh, shape: Sequence[int]) -> NamedSharding:
+    """NamedSharding for a client-stacked ``[K, ...]`` host array: rows
+    over the client axes when divisible (``client_axes``), replicated
+    on the mesh otherwise. Used to stage `DeviceDataset` rows on the
+    fed mesh so the training step and the federation round share one
+    device set."""
+    axes = client_axes(mesh, int(shape[0]))
+    return NamedSharding(mesh, P(axes, *([None] * (len(shape) - 1))))
+
+
 # parameter-name -> trailing-dims spec (DP = fsdp data axes, MP = model)
 # entries use 'DP' / 'MP' placeholders resolved against the mesh.
 _PARAM_RULES: Dict[str, Tuple] = {

@@ -1,0 +1,194 @@
+"""Device-resident training epochs (DESIGN.md §Device-resident epochs):
+scan-fused multi-step loop vs the per-step oracle, on-device batch
+sampling from the padded `DeviceDataset`, the in-carry middle-activation
+EMA, and the `generate()` label-cycling regression.
+
+Equivalence contract (measured, not aspirational):
+  * the on-device PRNG/sampling/EMA stream is *bit-identical* between
+    the fused scan and the per-step oracle — after one step from a
+    common state the EMAs are exactly equal;
+  * the scan carry is bit-exact: one scan of N steps == N scans of one
+    step (same compiled body), which pins state/key/EMA threading;
+  * params only match to XLA fusion noise amplified by Adam's step-1
+    ~sign(g) update (~lr per step): the backward pass compiles to
+    different fusions inside scan vs a standalone jit, so fused-vs-
+    oracle parameter deltas grow like a few x lr per step and the
+    multi-step comparison uses loose tolerances on purpose.
+
+The sharded twin (``multihost``) reuses the PR 2 fixture: a trainer
+whose fed_mesh both stages the dataset rows and runs federation.
+"""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import HuSCFConfig, HuSCFTrainer, PAPER_DEVICES
+from repro.core.latency import Cut
+from repro.core.splitting import group_by_profile
+from repro.data import ClientSpec, build_scenario, sample_batch, stage_clients
+
+MODULE = "test_train_fused"
+LR = 2e-4
+
+
+def _make_trainer(fused: bool, mesh=None, n_clients: int = 4, seed: int = 0,
+                  batch: int = 2, epoch_unroll=None):
+    clients = build_scenario("2dom_iid", num_clients=n_clients, base_size=16,
+                             seed=0)
+    devices = [PAPER_DEVICES[i % 2] for i in range(n_clients)]
+    cuts = [Cut(1, 3, 1, 3) if i % 2 == 0 else Cut(2, 4, 2, 4)
+            for i in range(n_clients)]
+    cfg = HuSCFConfig(batch=batch, steps_per_epoch=2, federate_every=10 ** 6,
+                      seed=seed, fused_epoch=fused,
+                      epoch_unroll=epoch_unroll)
+    return HuSCFTrainer(clients, devices, cuts=cuts, config=cfg,
+                        fed_mesh=mesh)
+
+
+def _tree_close(got, want, atol):
+    gl, gt = jax.tree_util.tree_flatten(got)
+    wl, wt = jax.tree_util.tree_flatten(want)
+    assert gt == wt
+    for g, w in zip(gl, wl):
+        g, w = np.asarray(g, np.float64), np.asarray(w, np.float64)
+        if atol == 0.0:
+            assert np.array_equal(g, w), "expected byte-identical trees"
+        else:
+            np.testing.assert_allclose(g, w, atol=atol, rtol=0)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    """(fused, oracle) trainers sharing topology, data, and PRNG seed,
+    plus their first-step observations — advancing both one step here
+    keeps every test on the fixture self-sufficient (no dependence on
+    which test runs first)."""
+    fused, oracle = _make_trainer(True), _make_trainer(False)
+    first = (fused.train_steps(1), oracle.train_steps(1),
+             fused.middle_activations(), oracle.middle_activations())
+    return fused, oracle, first
+
+
+def test_fused_matches_oracle_single_step(pair):
+    fused, oracle, (mf, mo, ema_f, ema_o) = pair
+    # identical PRNG stream -> identical batches -> identical forward
+    # pass: the middle-activation EMA agrees to the bit.
+    np.testing.assert_array_equal(ema_f, ema_o)
+    for k in mf:
+        np.testing.assert_allclose(mf[k], mo[k], rtol=1e-5)
+    # params: Adam's step-1 update is ~sign(grad) * lr, so backward
+    # fusion noise lands as O(lr) deltas — bound, don't bit-compare.
+    _tree_close(fused.state, oracle.state, atol=20 * LR)
+
+
+def test_fused_matches_oracle_ema_blend(pair):
+    """A step past the fixture's first exercises the 0.8/0.2 blend:
+    host-side numpy EMA (oracle) vs the in-carry device EMA (fused)
+    stay together."""
+    fused, oracle, _ = pair
+    fused.train_steps(1)
+    oracle.train_steps(1)
+    assert int(np.asarray(fused.state["step"])) >= 2  # blend branch ran
+    np.testing.assert_allclose(fused.middle_activations(),
+                               oracle.middle_activations(),
+                               atol=1e-3, rtol=0)
+    _tree_close(fused.state, oracle.state, atol=0.05)
+
+
+def test_scan_carry_bit_exact():
+    """One scan of two steps == two scans of one step, to the bit —
+    the (state, rng, mid_ema) carry threads exactly. Pinned to
+    epoch_unroll=1 (the accelerator configuration): the scan body
+    compiles once regardless of trip count, whereas the CPU-default
+    full unroll fuses across steps and only agrees to tolerance (the
+    `pair` tests above)."""
+    a = _make_trainer(True, seed=3, epoch_unroll=1)
+    b = _make_trainer(True, seed=3, epoch_unroll=1)
+    ma = a.train_steps(2)
+    b.train_steps(1)
+    mb = b.train_steps(1)
+    _tree_close(a.state, b.state, atol=0.0)
+    np.testing.assert_array_equal(a.middle_activations(),
+                                  b.middle_activations())
+    assert ma == mb
+
+
+def test_device_dataset_gather_stays_in_bounds():
+    """Padded rows carry a -1 label sentinel; the sampler draws indices
+    in [0, counts[k]) so no batch may ever contain it."""
+    rng = np.random.default_rng(0)
+    sizes = [3, 9, 5, 9]
+    clients = [ClientSpec(i, "gratings",
+                          rng.normal(size=(n, 28, 28, 1)).astype(np.float32),
+                          rng.integers(0, 10, n).astype(np.int64))
+               for i, n in enumerate(sizes)]
+    devices = [PAPER_DEVICES[0]] * 4
+    cuts = [Cut(1, 3, 1, 3)] * 4
+    groups = group_by_profile(devices, cuts)
+    ds = stage_clients(groups, clients)
+    (gname,) = ds.order
+    assert ds.images[gname].shape == (4, 9, 28, 28, 1)
+    assert np.asarray(ds.counts[gname]).tolist() == sizes
+    assert (np.asarray(ds.labels[gname]) == -1).sum() == sum(
+        max(sizes) - n for n in sizes)
+    sample = jax.jit(functools.partial(sample_batch, batch=16, z_dim=100,
+                                       num_classes=10))
+    for i in range(8):
+        batch = sample(ds, jax.random.PRNGKey(i))
+        y = np.asarray(batch["real_y"][gname])
+        assert y.shape == (4, 16)
+        assert (y >= 0).all(), "sampler read a padded row"
+        assert np.isfinite(np.asarray(batch["real_img"][gname])).all()
+
+
+def test_generate_returns_exact_labels_nondivisible(pair):
+    """Regression: with >1 profile group and len(labels) not divisible
+    by the per-round yield, the old np.resize window made every group
+    recycle the same labels — requested labels must come back exactly,
+    in order."""
+    fused, _, _ = pair
+    assert len(fused.groups) > 1
+    for n in (7, 13):
+        labels = (np.arange(n) * 3) % 10
+        imgs, labs = fused.generate(3, labels)
+        assert imgs.shape == (n, 28, 28, 1)
+        np.testing.assert_array_equal(labs, labels)
+
+
+# --------------------------------------------------------------------------
+# sharded twin (PR 2 multihost fixture): the fed mesh stages the
+# dataset rows and the step + federation share one device set
+# --------------------------------------------------------------------------
+
+def _check_fused_epoch_sharded():
+    import jax
+    from test_train_fused import _make_trainer, _tree_close
+    from repro.launch.mesh import make_federation_mesh
+    assert jax.device_count() >= 8
+    import numpy as np
+
+    mesh = make_federation_mesh(2)      # group size 2 -> divisible
+    tr_mesh = _make_trainer(True, mesh=mesh)
+    tr_none = _make_trainer(True)
+    # the staged rows really shard over the client axis
+    g0 = tr_mesh.groups[0].name
+    spec = tr_mesh._dataset.images[g0].sharding.spec
+    assert spec[0] == "data", f"dataset rows not sharded: {spec}"
+    tr_mesh.train_steps(2)
+    tr_none.train_steps(2)
+    np.testing.assert_allclose(tr_mesh.middle_activations(),
+                               tr_none.middle_activations(),
+                               atol=1e-3, rtol=0)
+    _tree_close(tr_mesh.state, tr_none.state, atol=0.05)
+    # federation rides the same mesh (sharded round vs single-device)
+    tr_mesh.federate()
+    tr_none.federate()
+    for net in ("G", "D"):
+        _tree_close(tr_mesh.state[net]["client"],
+                    tr_none.state[net]["client"], atol=0.05)
+
+
+def test_fused_epoch_sharded_multihost(multihost):
+    multihost(MODULE, "_check_fused_epoch_sharded")
