@@ -7,6 +7,9 @@ Sections:
   latency    — paper Tables 15/16/24/27 (analytic, exact reproduction)
   kernels    — Pallas kernel micro-benches
   federation — fused vs legacy Eq.-16 federation round (32 clients)
+  cluster    — stage-3/4 clustered round: host numpy vs device-resident
+               jitted/kernel path at 32/128 clients (``--cluster-tiny``
+               keeps only the 32-client scale for CI)
   train      — scan-fused device-resident epochs vs per-step loop
                (``--train-tiny`` shrinks to the 2-client CI config)
   quality    — paper Tables 6-13 analogue on synthetic multi-domain data
@@ -40,6 +43,8 @@ def main() -> None:
                     help="also write rows as a BENCH_*.json dict")
     ap.add_argument("--train-tiny", action="store_true",
                     help="train section at 2 clients x 2 steps (CI smoke)")
+    ap.add_argument("--cluster-tiny", action="store_true",
+                    help="cluster section at 32 clients only (CI smoke)")
     args = ap.parse_args()
 
     rows = []
@@ -49,8 +54,8 @@ def main() -> None:
                      "derived": derived})
         print(f"{name},{value:.3f},{derived}", flush=True)
 
-    sections = ["latency", "kernels", "federation", "train", "quality",
-                "kld", "ablation", "roofline"]
+    sections = ["latency", "kernels", "federation", "cluster", "train",
+                "quality", "kld", "ablation", "roofline"]
     if args.only:
         sections = [args.only]
 
@@ -65,6 +70,9 @@ def main() -> None:
     if "federation" in sections:
         from benchmarks import federation_bench
         federation_bench.run(_report)
+    if "cluster" in sections:
+        from benchmarks import cluster_bench
+        cluster_bench.run(_report, tiny=args.cluster_tiny)
     if "train" in sections:
         from benchmarks import train_bench
         train_bench.run(_report, tiny=args.train_tiny)

@@ -35,4 +35,13 @@ python -m benchmarks.run --only kernels --json results/bench_kernels.json
 python -m benchmarks.run --only train --train-tiny \
     --json results/bench_train.json
 
+# Stage-3/4 clustered-round bench, tiny config (32 clients): exercises
+# fused_cluster ON (jitted cluster+weight + in-jit weight matrix, with
+# and without the Pallas kmeans_assign kernel) and OFF (the host-numpy
+# oracle round) in one invocation, appending to the federation perf
+# trajectory. The pytest suite above additionally pins the two paths
+# to each other (tests/test_cluster_fused.py).
+python -m benchmarks.run --only cluster --cluster-tiny \
+    --json results/bench_federation.json
+
 echo "ci_smoke: OK"

@@ -3,9 +3,16 @@ from repro.core.latency import (Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER,
                                 mdgan_iteration_latency, fedsplitgan_iteration_latency,
                                 hflgan_iteration_latency, pflgan_iteration_latency)
 from repro.core.genetic import GAConfig, GAResult, optimize_cuts
-from repro.core.clustering import cluster_activations, kmeans, silhouette
-from repro.core.kld import (activation_weights, label_weights, federation_weights,
-                            global_weights, kl_divergence)
+from repro.core.clustering import (cluster_activations, cluster_activations_jax,
+                                   canonicalize_labels, k_selection_bound,
+                                   kmeans, kmeans_jax, silhouette,
+                                   silhouette_jax)
+from repro.core.kld import (activation_weights, activation_weights_jax,
+                            label_weights, federation_weights,
+                            federation_weights_jax, global_weights,
+                            kl_divergence)
 from repro.core.splitting import ProfileGroup, group_by_profile
-from repro.core.federation import federate_client_params, fedavg_uniform, weighted_average_stacked
+from repro.core.federation import (federate_client_params,
+                                   federate_client_params_device,
+                                   fedavg_uniform, weighted_average_stacked)
 from repro.core.huscf import HuSCFConfig, HuSCFTrainer, build_net_apply

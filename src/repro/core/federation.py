@@ -36,6 +36,16 @@ is not divisible by the mesh (``sharding.policy.client_axes``'s
 sanitize fallback) or the mesh has one device, the plan silently
 uses the single-device path; ``mesh=None`` (the default) is that
 path byte-for-byte.
+
+Device-resident round (DESIGN.md §Device-resident clustering): with
+stage 3+4 running on device (``clustering.cluster_activations_jax`` +
+``kld.activation_weights_jax``), ``federate_client_params_device``
+consumes the resulting *device* labels/weights arrays and assembles
+the block-diagonal weight matrix in-jit
+(``FederationPlan.device_weight_segments``): one segment row per
+(layer, cluster-id < k bound), so the segment count is fixed by the
+static ``k_selection_bound`` and never retraces as the selected k
+moves round to round.
 """
 from __future__ import annotations
 
@@ -194,6 +204,14 @@ class FederationPlan:
                 np.arange(*self._group_rows[g.name]) for g in groups
                 if l in owned[g.name]])
             self._layer_rows.append((l, rows, cids_arr[rows]))
+        # static per-copy indices for the in-jit weight-matrix build
+        # (device_weight_segments): seg_id(copy) = layer_pos * C + label
+        layer_pos = {l: i for i, (l, _, _) in enumerate(self._layer_rows)}
+        self._copy_layer_pos = np.zeros(max(self.n_copies, 1), np.int32)
+        self._copy_cid = np.zeros(max(self.n_copies, 1), np.int32)
+        for e in self.entries:
+            self._copy_layer_pos[e.sid0:e.sid1] = layer_pos[e.layer]
+            self._copy_cid[e.sid0:e.sid1] = cids_arr[e.row0:e.row1]
         self._owned = owned
         self._groups_order = [g.name for g in groups]
         self._agg_fns: Dict[Tuple[bool, bool], Callable] = {}
@@ -239,6 +257,43 @@ class FederationPlan:
         A = np.zeros((S, self.n_rows), np.float32)
         if rows_a:
             A[:len(rows_a)] = np.stack(rows_a)
+        return A, seg_ids
+
+    # -- device-side weight matrix (traced twin, in-jit) -------------------
+    def device_weight_segments(self, weights: jnp.ndarray,
+                               labels: jnp.ndarray, num_clusters: int
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Traced twin of ``weight_segments``: assemble (A [S, K],
+        seg_ids [n_copies]) from *device* per-client weights/labels so
+        the whole round stays in one jit (DESIGN.md §Device-resident
+        clustering).
+
+        Unlike the host path, which enumerates only the clusters
+        actually present, every (layer, cluster-id < num_clusters)
+        pair gets a segment row — ``num_clusters`` is the static
+        ``k_selection_bound``, so S is fixed and the round never
+        retraces as the silhouette-selected k moves. Rows of empty
+        segments are zero and never gathered (their seg_id is never
+        produced); a present segment whose member weights sum to zero
+        falls back to uniform over its members, like the host path."""
+        C = int(num_clusters)
+        n_seg = len(self._layer_rows) * C
+        S = max(_SEGMENT_PAD, -(-n_seg // _SEGMENT_PAD) * _SEGMENT_PAD)
+        A = jnp.zeros((S, self.n_rows), jnp.float32)
+        w = weights.astype(jnp.float32)
+        for li, (l, rows, cids) in enumerate(self._layer_rows):
+            lab = labels[cids]                                     # [R]
+            onehot = jax.nn.one_hot(lab, C, dtype=jnp.float32)     # [R, C]
+            raw = onehot * w[cids][:, None]
+            denom = raw.sum(0)                                     # [C]
+            cnt = onehot.sum(0)
+            blk = jnp.where(denom > 0,
+                            raw / jnp.where(denom > 0, denom, 1.0),
+                            onehot / jnp.maximum(cnt, 1.0))        # [R, C]
+            A = A.at[li * C:(li + 1) * C, rows].set(blk.T)
+        seg_ids = (jnp.asarray(self._copy_layer_pos[:self.n_copies]) * C
+                   + labels[jnp.asarray(self._copy_cid[:self.n_copies])]
+                   ).astype(jnp.int32)
         return A, seg_ids
 
     # -- device-side flatten / unflatten (inside jit) ----------------------
@@ -337,6 +392,37 @@ class FederationPlan:
         return self._agg_fns[key](net_params, jnp.asarray(A, jnp.float32),
                                   jnp.asarray(seg_ids, jnp.int32))
 
+    def _make_agg_device_fn(self, num_clusters: int, use_kernel: bool,
+                            donate: bool) -> Callable:
+        reduce = self._reduce_fn(use_kernel)
+        theta_sharding = (None if self._client_axes is None else
+                          NamedSharding(self.mesh, P(self._client_axes, None)))
+
+        def fn(net_params, weights, labels):
+            A, seg_ids = self.device_weight_segments(weights, labels,
+                                                     num_clusters)
+            theta = self._flatten(net_params)
+            if theta_sharding is not None:
+                theta = jax.lax.with_sharding_constraint(theta, theta_sharding)
+            agg = reduce(A, theta)
+            return self._unflatten(agg, seg_ids)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    def aggregate_device(self, net_params: Dict[str, Dict[str, Any]],
+                         weights: jnp.ndarray, labels: jnp.ndarray,
+                         num_clusters: int, use_kernel: bool = False,
+                         donate: bool = False) -> Dict[str, Dict[str, Any]]:
+        """Device-resident round: weights/labels are per-client device
+        arrays (label ids < the static ``num_clusters`` bound); the
+        Eq.-15/16 weight matrix is assembled in-jit — no host numpy
+        between the inputs and the aggregated params. weights/labels
+        are never donated (the caller reuses them across nets)."""
+        key = ("device", int(num_clusters), use_kernel, donate)
+        if key not in self._agg_fns:
+            self._agg_fns[key] = self._make_agg_device_fn(
+                int(num_clusters), use_kernel, donate)
+        return self._agg_fns[key](net_params, weights, labels)
+
 
 _PLAN_CACHE: Dict[Tuple, FederationPlan] = {}
 
@@ -373,6 +459,15 @@ def get_federation_plan(groups: Sequence[ProfileGroup], net: str,
         cache[key] = FederationPlan(groups, net, n_layers, template,
                                     mesh=mesh)
     return cache[key]
+
+
+def _default_n_layers() -> Dict[str, int]:
+    """Per-net layer counts derived from the model depth (lazy import:
+    federation must stay importable without the models package in the
+    graph at module load). A hardcoded {net: 5} here would silently
+    mis-plan the flat buffer if the layer defs ever grow."""
+    from repro.models.gan import DISC_LAYER_DEFS, GEN_LAYER_DEFS
+    return {"G": len(GEN_LAYER_DEFS), "D": len(DISC_LAYER_DEFS)}
 
 
 def donate_default() -> bool:
@@ -413,7 +508,7 @@ def federate_client_params(groups: Sequence[ProfileGroup],
     path unchanged. Non-divisible client counts fall back silently.
     Returns a new client_params with aggregated copies broadcast back.
     """
-    n_layers = n_layers or {"G": 5, "D": 5}
+    n_layers = n_layers or _default_n_layers()
     if not fused:
         return _federate_client_params_legacy(
             groups, client_params, weights, cluster_labels,
@@ -432,6 +527,43 @@ def federate_client_params(groups: Sequence[ProfileGroup],
         A, seg_ids = plan.weight_segments(weights, cluster_labels)
         new_net = plan.aggregate(template, A, seg_ids,
                                  use_kernel=use_kernel, donate=donate)
+        for g in groups:
+            if g.name in new_net:
+                out[g.name][net] = new_net[g.name]
+    return out
+
+
+def federate_client_params_device(
+        groups: Sequence[ProfileGroup],
+        client_params: Dict[str, Dict[str, Dict[str, Any]]],
+        weights: jnp.ndarray,
+        cluster_labels: jnp.ndarray,
+        num_clusters: int,
+        n_layers: Dict[str, int] = None,
+        use_kernel: bool = False,
+        plan_cache: Optional[Dict] = None,
+        donate: Optional[bool] = None,
+        mesh: Optional[Mesh] = None
+        ) -> Dict[str, Dict[str, Dict[str, Any]]]:
+    """Device-resident twin of ``federate_client_params``: weights and
+    cluster_labels are *device* arrays (e.g. straight out of the jitted
+    stage-3/4 ``cluster_activations_jax``/``activation_weights_jax``
+    chain) and the A matrix + seg_ids are assembled in-jit, so the
+    round performs zero host<->device transfers of activations, labels,
+    or weights. ``num_clusters`` is the static label-id bound
+    (``clustering.k_selection_bound``) that fixes the segment count."""
+    n_layers = n_layers or _default_n_layers()
+    donate = bool(donate)
+    out = {gname: dict(nets) for gname, nets in client_params.items()}
+    for net, n_lay in n_layers.items():
+        template = {g.name: client_params[g.name][net] for g in groups}
+        plan = get_federation_plan(groups, net, n_lay, template,
+                                   plan_cache=plan_cache, mesh=mesh)
+        if plan.n_rows == 0:
+            continue
+        new_net = plan.aggregate_device(template, weights, cluster_labels,
+                                        num_clusters, use_kernel=use_kernel,
+                                        donate=donate)
         for g in groups:
             if g.name in new_net:
                 out[g.name][net] = new_net[g.name]

@@ -27,8 +27,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kld as kld_mod
-from repro.core.clustering import cluster_activations
+from repro.core.clustering import (cluster_activations,
+                                   cluster_activations_jax,
+                                   k_selection_bound)
 from repro.core.federation import (donate_default, federate_client_params,
+                                   federate_client_params_device,
                                    fedavg_uniform)
 from repro.core.genetic import GAConfig, optimize_cuts
 from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
@@ -47,6 +50,10 @@ Array = jnp.ndarray
 
 _EMA_DECAY = 0.8                     # middle-activation EMA (stage 3 input)
 
+# client-ownable layer counts per net, derived from the model depth so
+# a layer-defs change cannot silently mis-plan the federation buffer
+_N_LAYERS = {"G": len(GEN_LAYER_DEFS), "D": len(DISC_LAYER_DEFS)}
+
 
 @dataclasses.dataclass
 class HuSCFConfig:
@@ -62,6 +69,10 @@ class HuSCFConfig:
     warmup_fed_rounds: int = 2       # vanilla FedAvg rounds (paper §4.5)
     fused_epoch: bool = True         # scan-fused device-resident epochs;
     #                                  False = per-step loop (oracle)
+    fused_cluster: bool = True       # device-resident stage 3+4 (jitted
+    #                                  k-means/silhouette/KLD + in-jit
+    #                                  weight matrix); False = host
+    #                                  numpy path (correctness oracle)
     epoch_unroll: Optional[int] = None
     # scan unroll for the fused epoch. None = backend auto: full unroll
     # on CPU (XLA:CPU only multithreads the entry computation, so a
@@ -271,6 +282,10 @@ class HuSCFTrainer:
         self._train_key = jax.random.PRNGKey(config.seed + 1)
         self._mid_ema = jnp.zeros((K, DISC_MIDDLE_FEATURES), jnp.float32)
         self._ema_init = jnp.zeros((), jnp.bool_)
+        # device-resident stage 3+4 inputs: dataset sizes staged once,
+        # a dedicated cluster PRNG key split per round on device
+        self._sizes_dev = jnp.asarray(self.sizes, jnp.float32)
+        self._cluster_key = jax.random.PRNGKey(config.seed + 2)
         if fed_mesh is not None and fed_mesh.devices.size > 1:
             from jax.sharding import NamedSharding, PartitionSpec as P
             rep = NamedSharding(fed_mesh, P())
@@ -279,6 +294,8 @@ class HuSCFTrainer:
             self._train_key = put(self._train_key)
             self._mid_ema = put(self._mid_ema)
             self._ema_init = put(self._ema_init)
+            self._sizes_dev = put(self._sizes_dev)
+            self._cluster_key = put(self._cluster_key)
         # fused-federation plans (treedefs/leaf shapes/layer offsets),
         # built on first round and reused so repeat rounds pay zero
         # host-side tree walking.
@@ -286,9 +303,11 @@ class HuSCFTrainer:
         self._step_core = self._build_step_core()
         self._step_fn = self._build_step()
         self._epoch_fns: Dict[int, Callable] = {}
+        self._cluster_fns: Dict[Tuple, Callable] = {}
         self._gen_fn = None
         self.fed_round = 0
         self.epoch = 0
+        self._trained = False        # host mirror of _ema_init (no readback)
         self._mid_acc: Dict[int, np.ndarray] = {}
         self.history: List[Dict[str, float]] = []
 
@@ -445,6 +464,9 @@ class HuSCFTrainer:
             (self.state, self._train_key, self._mid_ema, self._ema_init,
              metrics) = fn(self.state, self._dataset, self._train_key,
                            self._mid_ema, self._ema_init)
+            # only after the epoch dispatched: a failed first call must
+            # leave the fused federate()'s empty-EMA guard armed
+            self._trained = True
             return {k: float(v[-1]) for k, v in metrics.items()}
         # oracle: one dispatch per step, blocking mid-activation
         # readback + per-client Python EMA each step
@@ -460,6 +482,7 @@ class HuSCFTrainer:
                         m[pos] if prev is None
                         else _EMA_DECAY * prev + (1 - _EMA_DECAY) * m[pos])
             last = {k: float(v) for k, v in metrics.items()}
+            self._trained = True
         return last
 
     def train_epoch(self) -> Dict[str, float]:
@@ -496,6 +519,14 @@ class HuSCFTrainer:
                  mesh: Any = _MESH_DEFAULT) -> Dict[str, Any]:
         """Stages 3+4. Returns diagnostics.
 
+        With ``cfg.fused_cluster`` (the default) the clustered rounds
+        run entirely on device (jitted k-means + silhouette selection
+        + log-space Eq. 13-15 + in-jit weight matrix) and the
+        diagnostic arrays come back as device arrays. The host numpy
+        path is the correctness oracle (``fused_cluster=False``) and
+        still serves ``use_label_kld=True``, whose label histograms
+        live on the host by construction.
+
         mesh overrides the trainer's ``fed_mesh`` for this round
         (client-axis-sharded aggregation); pass ``mesh=None``
         explicitly to force the single-device path on a trainer that
@@ -509,13 +540,16 @@ class HuSCFTrainer:
                 # the trainer drops its references right below, so the
                 # round may donate the old client buffers (TPU/GPU)
                 out = fedavg_uniform(self.groups, wrapped, self.sizes,
-                                     n_layers={net: 5},
+                                     n_layers={net: _N_LAYERS[net]},
                                      use_kernel=self.cfg.use_kernel,
                                      plan_cache=self._fed_plans,
                                      donate=donate_default(), mesh=mesh)
                 self.state[net]["client"] = {g.name: out[g.name][net]
                                              for g in self.groups}
             return {"round": self.fed_round, "mode": "fedavg"}
+
+        if self.cfg.fused_cluster and not use_label_kld:
+            return self._federate_fused(mesh)
 
         acts = self.middle_activations()
         cl = cluster_activations(acts, k=self.cfg.num_clusters,
@@ -532,7 +566,8 @@ class HuSCFTrainer:
             wrapped = {g.name: {net: self.state[net]["client"][g.name]}
                        for g in self.groups}
             out = federate_client_params(self.groups, wrapped, weights,
-                                         cl.labels, n_layers={net: 5},
+                                         cl.labels,
+                                         n_layers={net: _N_LAYERS[net]},
                                          use_kernel=self.cfg.use_kernel,
                                          plan_cache=self._fed_plans,
                                          donate=donate_default(), mesh=mesh)
@@ -541,6 +576,64 @@ class HuSCFTrainer:
         return {"round": self.fed_round, "mode": "clustered",
                 "k": cl.k, "silhouette": cl.silhouette,
                 "labels": cl.labels, "weights": weights, "klds": klds}
+
+    # -- device-resident stage 3+4 (fused_cluster) -------------------------
+    def _get_cluster_fn(self) -> Callable:
+        """Jitted (acts, sizes, key) -> (labels, k, sil, weights, klds)
+        — stage 3+4 compute in one dispatch. Cached per (beta,
+        num_clusters, use_kernel) because benchmarks mutate cfg fields
+        between rounds."""
+        key = (float(self.cfg.beta), self.cfg.num_clusters,
+               self.cfg.use_kernel)
+        fn = self._cluster_fns.get(key)
+        if fn is None:
+            beta, k_cfg = float(self.cfg.beta), self.cfg.num_clusters
+            use_kernel = self.cfg.use_kernel
+
+            def cluster_weight(acts, sizes, key):
+                labels, k_sel, sil = cluster_activations_jax(
+                    acts, key, k=k_cfg, use_kernel=use_kernel)
+                weights, klds = kld_mod.activation_weights_jax(
+                    acts, sizes, labels,
+                    k_selection_bound(acts.shape[0], k_cfg), beta)
+                return labels, k_sel, sil, weights, klds
+
+            fn = self._cluster_fns[key] = jax.jit(cluster_weight)
+        return fn
+
+    def _federate_fused(self, mesh) -> Dict[str, Any]:
+        """Clustered round without leaving the device: the EMA feeds
+        the jitted cluster+weight chain, whose device labels/weights
+        feed the in-jit weight-matrix aggregation — zero host<->device
+        transfers of activations/labels/weights between train_steps
+        and the aggregated params. Diagnostics are device arrays
+        (reading them back is the caller's choice)."""
+        if not self._trained:
+            # same failure mode as the oracle path's empty-EMA check,
+            # but off a host flag: no device readback in this method
+            raise RuntimeError(
+                "federate() before any training step: the middle-"
+                "activation EMA is empty")
+        acts = (self._mid_ema if self.cfg.fused_epoch
+                else jnp.asarray(self.middle_activations()))
+        self._cluster_key, sub = jax.random.split(self._cluster_key)
+        labels, k_sel, sil, weights, klds = self._get_cluster_fn()(
+            acts, self._sizes_dev, sub)
+        bound = k_selection_bound(len(self.clients), self.cfg.num_clusters)
+        for net in ("G", "D"):
+            wrapped = {g.name: {net: self.state[net]["client"][g.name]}
+                       for g in self.groups}
+            out = federate_client_params_device(
+                self.groups, wrapped, weights, labels, bound,
+                n_layers={net: _N_LAYERS[net]},
+                use_kernel=self.cfg.use_kernel,
+                plan_cache=self._fed_plans,
+                donate=donate_default(), mesh=mesh)
+            self.state[net]["client"] = {g.name: out[g.name][net]
+                                         for g in self.groups}
+        return {"round": self.fed_round, "mode": "clustered",
+                "k": k_sel, "silhouette": sil, "labels": labels,
+                "weights": weights, "klds": klds}
 
     # -- generation for evaluation ------------------------------------------
     def generate(self, n_per_client_batch: int, labels: np.ndarray

@@ -5,14 +5,25 @@ P_j,k = leave-one-out mean of P over client k's cluster
 KLD_k = KL(P_k || P_j,k)
 s_k   = n_k exp(-beta KLD_k) / sum_{j in cluster} n_j exp(-beta KLD_j)
 
+Eq. (15) is computed in **log-space** (softmax of ``log n_k − beta
+KLD_k`` within each cluster): the literal ``n_k exp(-beta KLD_k)``
+underflows to all-zero at the paper's beta=150 for moderate KLDs,
+which silently discarded the sizes and fell back to *uniform* weights.
+The log-space form is exact where the literal form doesn't underflow
+and stays size-weighted in the degenerate limit.
+
 Also provides the label-distribution-based variant (FeGAN-style,
 paper §6.3 comparison) which shares the same weighting equation but
-feeds label histograms instead of activations.
+feeds label histograms instead of activations, and jit-compatible JAX
+twins (``*_jax``) of the Eq. 13-15 chain for the device-resident
+clustered round (DESIGN.md §Device-resident clustering).
 """
 from __future__ import annotations
 
 from typing import Dict, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -49,24 +60,41 @@ def cluster_klds(P: np.ndarray, labels: np.ndarray) -> np.ndarray:
     return klds
 
 
+def _logits(klds: np.ndarray, sizes: np.ndarray, beta: float) -> np.ndarray:
+    """log n_k − beta KLD_k, the log of Eq. 15's unnormalized s_k."""
+    return (np.log(np.maximum(sizes.astype(np.float64), 1e-300))
+            - beta * np.asarray(klds, np.float64))
+
+
+def _softmax_masked(logits: np.ndarray, mask: np.ndarray) -> np.ndarray:
+    l = logits[mask]
+    e = np.exp(l - l.max())
+    return e / e.sum()
+
+
 def federation_weights(klds: np.ndarray, sizes: np.ndarray,
                        labels: np.ndarray, beta: float = 150.0) -> np.ndarray:
     """Eq. (15): within-cluster normalized s_k. Returns [K] weights that
-    sum to 1 *within each cluster*."""
-    raw = sizes.astype(np.float64) * np.exp(-beta * klds)
-    out = np.zeros_like(raw)
+    sum to 1 *within each cluster*.
+
+    Computed as a log-space softmax of ``log n_k − beta KLD_k`` per
+    cluster: ``n_k exp(-beta KLD_k)`` underflows to all-zero at
+    beta=150 for KLDs past ~5, and the old ``denom > 0`` fallback then
+    silently dropped the sizes and went uniform."""
+    logits = _logits(klds, sizes, beta)
+    out = np.zeros_like(logits)
     for c in np.unique(labels):
         mask = labels == c
-        denom = raw[mask].sum()
-        out[mask] = raw[mask] / denom if denom > 0 else 1.0 / mask.sum()
+        out[mask] = _softmax_masked(logits, mask)
     return out
 
 
 def global_weights(klds: np.ndarray, sizes: np.ndarray,
                    beta: float = 150.0) -> np.ndarray:
-    """Eq. (15) applied globally (server-side segments, paper §4.5 end)."""
-    raw = sizes.astype(np.float64) * np.exp(-beta * klds)
-    return raw / raw.sum()
+    """Eq. (15) applied globally (server-side segments, paper §4.5 end).
+    Log-space for the same underflow reason as federation_weights."""
+    logits = _logits(klds, sizes, beta)
+    return _softmax_masked(logits, np.ones(len(logits), bool))
 
 
 def activation_weights(acts: np.ndarray, sizes: np.ndarray,
@@ -87,3 +115,51 @@ def label_weights(label_hists: np.ndarray, sizes: np.ndarray,
     P = P / np.clip(P.sum(-1, keepdims=True), 1e-12, None)
     klds = cluster_klds(P, labels)
     return federation_weights(klds, sizes, labels, beta), klds
+
+
+# ---------------------------------------------------------------------------
+# JAX twins (device-resident stage 4 — DESIGN.md §Device-resident clustering)
+# ---------------------------------------------------------------------------
+
+def cluster_klds_jax(P: jnp.ndarray, labels: jnp.ndarray,
+                     num_clusters: int, eps: float = 1e-12) -> jnp.ndarray:
+    """Traced twin of cluster_klds: Eq. (14) leave-one-out cluster mean
+    + Eq. (2) KLD per client. ``num_clusters`` is the static label-id
+    bound; singleton clusters score 0 like the numpy path."""
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=P.dtype)   # [K, C]
+    counts = onehot.sum(0)                                         # [C]
+    csum = onehot.T @ P                                            # [C, F]
+    own = counts[labels]                                           # [K]
+    loo = (csum[labels] - P) / jnp.maximum(own - 1.0, 1.0)[:, None]
+    p = jnp.clip(P, eps, None)
+    q = jnp.clip(loo, eps, None)
+    kld = jnp.sum(p * (jnp.log(p) - jnp.log(q)), axis=-1)
+    return jnp.where(own > 1, kld, 0.0)
+
+
+def federation_weights_jax(klds: jnp.ndarray, sizes: jnp.ndarray,
+                           labels: jnp.ndarray, num_clusters: int,
+                           beta: float = 150.0) -> jnp.ndarray:
+    """Traced twin of federation_weights: within-cluster log-space
+    softmax of ``log n_k − beta KLD_k`` via one-hot segment reductions
+    (no host loop over cluster ids)."""
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)
+    logits = (jnp.log(jnp.maximum(sizes.astype(jnp.float32), 1e-30))
+              - beta * klds.astype(jnp.float32))
+    seg_max = jnp.where(onehot > 0, logits[:, None], -jnp.inf).max(0)  # [C]
+    e = jnp.exp(logits - seg_max[labels])
+    denom = onehot.T @ e                                               # [C]
+    return e / denom[labels]
+
+
+def activation_weights_jax(acts: jnp.ndarray, sizes: jnp.ndarray,
+                           labels: jnp.ndarray, num_clusters: int,
+                           beta: float = 150.0
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """End-to-end Eq. 13-15 on device: returns (intra-cluster weights,
+    klds) as device arrays. f32 (the numpy oracle runs f64 — agreement
+    is to fp tolerance, amplified by beta in the weights)."""
+    P = jax.nn.softmax(acts.astype(jnp.float32), axis=-1)
+    klds = cluster_klds_jax(P, labels, num_clusters)
+    return federation_weights_jax(klds, sizes, labels, num_clusters,
+                                  beta), klds

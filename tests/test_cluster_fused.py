@@ -1,0 +1,370 @@
+"""Device-resident clustered federation (DESIGN.md §Device-resident
+clustering): the three stage-3/4 numerical bugfixes (KLD weight
+underflow, singleton-silhouette bias, empty-cluster re-seed), the
+jitted cluster+weight chain vs the numpy oracle, and the fused
+``federate()`` path.
+
+Equivalence contract (measured, not aspirational):
+  * on separated populations both k-means implementations converge to
+    the same partition regardless of seeding, and first-occurrence
+    label canonicalization makes the ids comparable — cluster labels
+    and the selected k agree *exactly*;
+  * weights/KLDs agree to fp tolerance only: the device chain runs
+    f32 where the oracle runs f64, and beta multiplies the KLD error
+    into the weight logits;
+  * aggregated params agree to f32-accumulation tolerance (the same
+    bound the fused-vs-legacy federation tests use).
+
+The fused path's "no host round-trip" claim is enforced with
+``jax.transfer_guard('disallow_explicit')`` around a compiled round —
+and the numpy-oracle round is asserted to *trip* the same guard, so
+the guard is known to catch exactly the transfers the fused path
+eliminates. The sharded twin (``multihost``) re-runs the fused-vs-
+oracle trainer comparison at 8 forced CPU devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clustering
+from repro.core import kld as kldm
+from repro.core.clustering import (cluster_activations,
+                                   cluster_activations_jax, k_selection_bound,
+                                   kmeans, silhouette)
+from repro.core.federation import (federate_client_params,
+                                   federate_client_params_device)
+from repro.core.huscf import HuSCFConfig, HuSCFTrainer
+from repro.core.latency import Cut, PAPER_DEVICES
+from repro.core.splitting import group_by_profile
+from repro.data import build_scenario
+from repro.models.gan import DISC_MIDDLE_FEATURES
+
+MODULE = "test_cluster_fused"
+
+
+# --------------------------------------------------------------------------
+# bugfix regressions (satellites)
+# --------------------------------------------------------------------------
+
+def test_silhouette_singleton_scores_zero():
+    """Regression: a singleton cluster used to get a=0 => s_i=1 (a
+    perfect score); the standard convention is s_i=0."""
+    x = np.array([[0.0, 0.0], [10.0, 0.0], [20.0, 0.0]])
+    assert silhouette(x, np.array([0, 1, 2])) == 0.0
+
+
+def test_silhouette_selection_not_biased_to_fragmentation():
+    """Regression: on two noisy blobs the singleton s_i=1 bias made the
+    old k-selection prefer a fragmenting k=3 (isolating a point) over
+    the true k=2; the fixed convention picks 2."""
+    rng = np.random.default_rng(2)
+    x = np.vstack([rng.normal(0, 1.0, (3, 4)),
+                   rng.normal(0, 1.0, (3, 4)) + 2.0])
+    mu, sd = x.mean(0), x.std(0) + 1e-8
+    z = (x - mu) / sd
+
+    def silhouette_biased(z, labels):     # the pre-fix convention
+        d = np.sqrt(np.maximum(((z[:, None, :] - z[None]) ** 2).sum(-1), 0.0))
+        uniq, s = np.unique(labels), np.zeros(len(z))
+        for i in range(len(z)):
+            same = labels == labels[i]
+            same[i] = False
+            a = d[i][same].mean() if same.any() else 0.0
+            b = min(d[i][labels == c].mean() for c in uniq if c != labels[i])
+            s[i] = 0.0 if max(a, b) == 0 else (b - a) / max(a, b)
+        return s.mean()
+
+    sils, biased = {}, {}
+    for kk in (2, 3):
+        labels, _, _ = kmeans(z, kk, seed=0)
+        sils[kk] = silhouette(z, labels)
+        biased[kk] = silhouette_biased(z, labels)
+    assert biased[3] > biased[2]          # the bug: fragmentation wins
+    assert sils[2] > sils[3]              # the fix: true k wins
+    assert cluster_activations(x, seed=0).k == 2
+
+
+def test_kmeans_empty_cluster_reseeds_distinct(monkeypatch):
+    """Regression: duplicate initial centers empty k-2 clusters in the
+    first Lloyd update; the stale-d2 re-seed put every empty cluster at
+    the same farthest point (duplicate centers); the fix re-seeds at
+    distinct points measured against the updated centers."""
+    rng = np.random.default_rng(0)
+    x = np.vstack([rng.normal(0, 0.1, (6, 3)) - 4,
+                   rng.normal(0, 0.1, (6, 3)) + 4])
+    monkeypatch.setattr(clustering, "kmeans_pp_init",
+                        lambda x_, k, rng_: np.stack(
+                            [x_[0], x_[6], x_[0], x_[0]]))
+    for iters in (1, 50):                 # one update, and converged
+        _, centers, _ = kmeans(x, 4, seed=0, iters=iters)
+        d2 = ((centers[:, None] - centers[None]) ** 2).sum(-1)
+        assert d2[~np.eye(4, dtype=bool)].min() > 1e-6, \
+            f"duplicate centers after iters={iters}"
+
+
+def test_canonicalize_labels_first_occurrence_order():
+    canon, _ = clustering.canonicalize_labels(np.array([2, 2, 0, 5, 0, 2]))
+    np.testing.assert_array_equal(canon, [0, 0, 1, 2, 1, 0])
+
+
+def test_federation_weights_logspace_matches_literal_small_beta():
+    """Where n_k exp(-beta KLD) does not underflow, the log-space form
+    is the same formula."""
+    rng = np.random.default_rng(0)
+    klds = rng.random(8) * 0.5
+    sizes = rng.integers(50, 700, 8)
+    labels = np.array([0, 0, 0, 1, 1, 1, 1, 2])
+    for beta in (0.0, 1.0, 10.0):
+        raw = sizes.astype(np.float64) * np.exp(-beta * klds)
+        want = np.zeros(8)
+        for c in np.unique(labels):
+            m = labels == c
+            want[m] = raw[m] / raw[m].sum()
+        got = kldm.federation_weights(klds, sizes, labels, beta=beta)
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+        np.testing.assert_allclose(kldm.global_weights(klds, sizes, beta=beta),
+                                   raw / raw.sum(), rtol=1e-12)
+
+
+def test_federation_weights_no_underflow_at_paper_beta():
+    """Regression: at beta=150, exp(-beta KLD) underflows past KLD ~ 5
+    and the old path silently went *uniform*, discarding n_k. Equal
+    KLDs must stay size-proportional at any beta."""
+    klds = np.full(4, 8.0)                # exp(-1200) == 0.0 in f64
+    sizes = np.array([100, 300, 500, 100])
+    labels = np.zeros(4, np.int64)
+    w = kldm.federation_weights(klds, sizes, labels, beta=150.0)
+    np.testing.assert_allclose(w, sizes / sizes.sum(), rtol=1e-12)
+    g = kldm.global_weights(klds, sizes, beta=150.0)
+    np.testing.assert_allclose(g, sizes / sizes.sum(), rtol=1e-12)
+    # and with spread KLDs the ordering still holds (no all-zero denom)
+    klds = np.array([6.0, 7.0, 8.0, 9.0])
+    w = kldm.federation_weights(klds, np.full(4, 100), labels, beta=150.0)
+    assert np.all(np.isfinite(w)) and abs(w.sum() - 1.0) < 1e-12
+    assert w[0] > w[1] > w[2] > w[3]
+
+
+# --------------------------------------------------------------------------
+# device cluster+weight chain vs the numpy oracle
+# --------------------------------------------------------------------------
+
+def _blobs(n_per, offs, dim, seed, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return np.vstack([rng.normal(0, scale, (n_per, dim)) + off
+                      for off in offs]).astype(np.float32)
+
+
+@pytest.mark.parametrize("seed,offs", [(0, (-8, 0, 8)), (1, (-6, 6)),
+                                       (2, (-9, -3, 3, 9))])
+def test_cluster_weight_device_matches_numpy(seed, offs):
+    acts = _blobs(4, offs, 32, seed)
+    K = acts.shape[0]
+    sizes = np.random.default_rng(seed + 100).integers(50, 700, K)
+
+    res = cluster_activations(acts, seed=0)
+    w_np, klds_np = kldm.activation_weights(acts, sizes, res.labels,
+                                            beta=150.0)
+    labels_j, k_j, sil_j = cluster_activations_jax(
+        jnp.asarray(acts), jax.random.PRNGKey(seed))
+    bound = k_selection_bound(K)
+    w_j, klds_j = kldm.activation_weights_jax(
+        jnp.asarray(acts), jnp.asarray(sizes, jnp.float32), labels_j,
+        bound, 150.0)
+
+    assert int(k_j) == res.k == len(offs)
+    np.testing.assert_array_equal(np.asarray(labels_j), res.labels)
+    np.testing.assert_allclose(float(sil_j), res.silhouette, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(klds_j), klds_np, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(w_j), w_np, atol=1e-4)
+
+
+def test_cluster_jax_fixed_k_fallback_and_kernel():
+    # fixed k honored (and its labels match the oracle's)
+    acts = _blobs(5, (-5, 5), 16, 3)
+    labels_j, k_j, _ = cluster_activations_jax(jnp.asarray(acts),
+                                               jax.random.PRNGKey(0), k=2)
+    res = cluster_activations(acts, k=2, seed=0)
+    assert int(k_j) == 2
+    np.testing.assert_array_equal(np.asarray(labels_j), res.labels)
+    # Pallas kmeans_assign twin gives the same assignment
+    labels_k, k_k, _ = cluster_activations_jax(
+        jnp.asarray(acts), jax.random.PRNGKey(0), k=2, use_kernel=True)
+    assert int(k_k) == 2
+    np.testing.assert_array_equal(np.asarray(labels_k), np.asarray(labels_j))
+    # unstructured activations: weak silhouette -> k=1, labels zero
+    noise = np.random.default_rng(4).normal(0, 1, (12, 16)).astype(np.float32)
+    labels_n, k_n, sil_n = cluster_activations_jax(
+        jnp.asarray(noise), jax.random.PRNGKey(0), min_silhouette=0.3)
+    assert int(k_n) == 1 and float(sil_n) == 0.0
+    assert not np.asarray(labels_n).any()
+
+
+def _tiny_population():
+    devs = [PAPER_DEVICES[0]] * 2 + [PAPER_DEVICES[1]] * 2
+    cuts = [Cut(1, 3, 1, 3)] * 2 + [Cut(2, 4, 2, 4)] * 2
+    return group_by_profile(devs, cuts)
+
+
+def test_device_weight_segments_matches_host():
+    """The in-jit A/seg_ids assembly reproduces the host-built round:
+    same weights/labels in, allclose aggregated params out."""
+    groups = _tiny_population()
+    rng = np.random.default_rng(0)
+    client_params = {}
+    for g in groups:
+        owned = list(range(g.cut.g_h)) + list(range(g.cut.g_t, 5))
+        client_params[g.name] = {"G": {
+            str(l): {"w": jnp.asarray(rng.normal(0, 1, (g.size, 3, 4)),
+                                      jnp.float32)}
+            for l in owned}}
+    weights = rng.random(4)
+    labels = np.array([0, 1, 0, 1])
+    host = federate_client_params(groups, client_params, weights, labels,
+                                  n_layers={"G": 5})
+    dev = federate_client_params_device(
+        groups, client_params, jnp.asarray(weights, jnp.float32),
+        jnp.asarray(labels, jnp.int32), 2, n_layers={"G": 5})
+    hl, ht = jax.tree_util.tree_flatten(host)
+    dl, dt = jax.tree_util.tree_flatten(dev)
+    assert ht == dt
+    for h, d in zip(hl, dl):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(h), atol=1e-6)
+    # a label id below the bound that never occurs = empty segments only
+    dev3 = federate_client_params_device(
+        groups, client_params, jnp.asarray(weights, jnp.float32),
+        jnp.asarray(labels, jnp.int32), 3, n_layers={"G": 5})
+    for h, d in zip(hl, jax.tree_util.tree_leaves(dev3)):
+        np.testing.assert_allclose(np.asarray(d), np.asarray(h), atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# trainer: fused_cluster vs the numpy-oracle federate
+# --------------------------------------------------------------------------
+
+def _make_trainer(fused_cluster: bool, mesh=None, n_clients: int = 4,
+                  seed: int = 0):
+    clients = build_scenario("2dom_iid", num_clients=n_clients, base_size=16,
+                             seed=0)
+    devices = [PAPER_DEVICES[i % 2] for i in range(n_clients)]
+    cuts = [Cut(1, 3, 1, 3) if i % 2 == 0 else Cut(2, 4, 2, 4)
+            for i in range(n_clients)]
+    cfg = HuSCFConfig(batch=2, steps_per_epoch=2, federate_every=10 ** 6,
+                      seed=seed, warmup_fed_rounds=0,
+                      fused_cluster=fused_cluster)
+    return HuSCFTrainer(clients, devices, cuts=cuts, config=cfg,
+                        fed_mesh=mesh)
+
+
+def _ema_blobs(n_clients: int, seed: int = 7):
+    """Well-separated synthetic EMA: both k-means implementations
+    converge to the same partition regardless of seeding."""
+    rng = np.random.default_rng(seed)
+    half = n_clients // 2
+    return np.vstack(
+        [rng.normal(0, 0.3, (half, DISC_MIDDLE_FEATURES)) - 5,
+         rng.normal(0, 0.3, (n_clients - half, DISC_MIDDLE_FEATURES)) + 5]
+    ).astype(np.float32)
+
+
+def _client_state(tr):
+    return jax.tree_util.tree_map(
+        np.asarray, {net: tr.state[net]["client"] for net in ("G", "D")})
+
+
+@pytest.fixture(scope="module")
+def fedpair():
+    """(fused, oracle) trainers with identical params and an injected
+    common EMA, plus their first clustered-round diagnostics/states."""
+    fused, oracle = _make_trainer(True), _make_trainer(False)
+    fused.train_steps(1)
+    oracle.train_steps(1)
+    blob = _ema_blobs(4)
+    fused._mid_ema = jnp.asarray(blob)
+    oracle._mid_ema = jnp.asarray(blob)
+    df, do = fused.federate(), oracle.federate()
+    return fused, oracle, df, do, (_client_state(fused),
+                                   _client_state(oracle))
+
+
+def test_fused_cluster_matches_numpy_oracle(fedpair):
+    _, _, df, do, (sf, so) = fedpair
+    assert df["mode"] == do["mode"] == "clustered"
+    assert int(df["k"]) == do["k"] == 2
+    np.testing.assert_array_equal(np.asarray(df["labels"]), do["labels"])
+    np.testing.assert_allclose(float(df["silhouette"]), do["silhouette"],
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(df["weights"]), do["weights"],
+                               atol=1e-4)
+    # device weights still sum to one within each cluster
+    w, labels = np.asarray(df["weights"]), np.asarray(df["labels"])
+    for c in np.unique(labels):
+        np.testing.assert_allclose(w[labels == c].sum(), 1.0, atol=1e-6)
+    # aggregated params within f32-accumulation tolerance of the oracle
+    fl, ft = jax.tree_util.tree_flatten(sf)
+    ol, ot = jax.tree_util.tree_flatten(so)
+    assert ft == ot
+    for f, o in zip(fl, ol):
+        np.testing.assert_allclose(f, o, atol=5e-4, rtol=0)
+
+
+def test_fused_cluster_zero_host_transfers(fedpair):
+    """The acceptance property: with everything compiled, a fused
+    clustered round runs under jax.transfer_guard('disallow_explicit')
+    — no host<->device movement of activations/labels/weights — while
+    the numpy-oracle round trips the very same guard (so the guard is
+    known to see the transfers being eliminated)."""
+    fused, oracle, _, _, _ = fedpair
+    fused.train_steps(1)
+    oracle.train_steps(1)
+    with jax.transfer_guard("disallow_explicit"):
+        diag = fused.federate()
+    assert diag["mode"] == "clustered"
+    with pytest.raises(Exception, match="[Dd]isallowed.*transfer"):
+        with jax.transfer_guard("disallow_explicit"):
+            oracle.federate()
+
+
+def test_fused_cluster_before_training_raises():
+    tr = _make_trainer(True)
+    with pytest.raises(RuntimeError, match="EMA is empty"):
+        tr.federate()
+
+
+# --------------------------------------------------------------------------
+# sharded twin (multihost fixture): fused cluster round on a client-axis
+# mesh vs the numpy oracle, 8 forced CPU devices
+# --------------------------------------------------------------------------
+
+def _check_fused_cluster_sharded():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from test_cluster_fused import _client_state, _ema_blobs, _make_trainer
+    from repro.launch.mesh import make_federation_mesh
+    assert jax.device_count() >= 8
+
+    mesh = make_federation_mesh(2)      # group size 2 -> divisible
+    tr_fused = _make_trainer(True, mesh=mesh)
+    tr_oracle = _make_trainer(False, mesh=mesh)
+    tr_fused.train_steps(1)
+    tr_oracle.train_steps(1)
+    blob = _ema_blobs(4)
+    rep = NamedSharding(mesh, P())
+    tr_fused._mid_ema = jax.device_put(jnp.asarray(blob), rep)
+    tr_oracle._mid_ema = jax.device_put(jnp.asarray(blob), rep)
+    df, do = tr_fused.federate(), tr_oracle.federate()
+    assert int(df["k"]) == do["k"] == 2
+    np.testing.assert_array_equal(np.asarray(df["labels"]), do["labels"])
+    np.testing.assert_allclose(np.asarray(df["weights"]), do["weights"],
+                               atol=1e-4)
+    ff = jax.tree_util.tree_flatten(_client_state(tr_fused))
+    oo = jax.tree_util.tree_flatten(_client_state(tr_oracle))
+    assert ff[1] == oo[1]
+    for f, o in zip(ff[0], oo[0]):
+        np.testing.assert_allclose(f, o, atol=5e-4, rtol=0)
+
+
+def test_fused_cluster_sharded_multihost(multihost):
+    multihost(MODULE, "_check_fused_cluster_sharded")
