@@ -15,6 +15,19 @@ init, so each device count runs in its own subprocess
 its warm round time back on stdout. On this CPU container the shards
 share one physical socket — the numbers track dispatch/collective
 overhead of the shard_map path, not real multi-host scaling.
+
+Chunked section (DESIGN.md §Chunk-streamed aggregation): a synthetic
+population-scale round — 2 profile groups over a 2-layer net with
+n_cols ~ 8192 — at 1k and 8k clients, streamed in chunks of 256. The
+headline is the memory claim, not wall clock: the dense paths
+materialize a ``theta [K, D]`` f32 buffer (`dense_buffer_bytes`) that
+grows with the client count, while the chunk stream's working set
+(`chunked_buffer_bytes`) is O(chunk + clusters). Against a 128 MB
+working-set envelope the 8k dense buffer (256 MB) does not fit, so its
+wall clock is skipped and only the chunked round reports; at 1k both
+run and the dense round is the wall-clock baseline. ``tiny=True``
+(ci_smoke) keeps a 256-client / d=512 / chunk-64 variant of just this
+section.
 """
 from __future__ import annotations
 
@@ -73,7 +86,15 @@ def _round_inputs():
     return groups, params, n_params, weights, labels
 
 
-def run(report):
+def run(report, tiny=False):
+    if tiny:
+        _run_chunked(report, tiny=True)
+        return
+    _run_dense_vs_legacy(report)
+    _run_chunked(report, tiny=False)
+
+
+def _run_dense_vs_legacy(report):
     groups, params, n_params, weights, labels = _round_inputs()
     plans = {}
 
@@ -103,6 +124,77 @@ def run(report):
         derived = ("single-device fallback (mesh of 1)" if n == 1 else
                    f"shard_map+psum, {N_CLIENTS // n} client rows/shard")
         report(f"federation/sharded_round_{n}dev_{scale}", us, derived)
+
+
+# ---------------------------------------------------------------------------
+# chunk-streamed population-scale section
+# ---------------------------------------------------------------------------
+
+# (n_clients, chunk, f32-per-layer): 2 layers -> n_cols = 2 * d_layer
+CHUNK_SCALES = ((1024, 256, 4096), (8192, 256, 4096))
+CHUNK_SCALES_TINY = ((256, 64, 256),)
+MEM_ENVELOPE_BYTES = 128 * 2 ** 20
+
+
+def _chunk_population(n_clients, d_layer, seed=0):
+    """Synthetic 2-group population over a 2-layer net: cut (1,2) owns
+    layer 0 only, cut (2,2) owns both — heterogeneous ownership with
+    the smallest possible layer count, so the buffers are all client
+    rows, not model depth."""
+    half = n_clients // 2
+    devices = ([PAPER_DEVICES[0]] * half
+               + [PAPER_DEVICES[1]] * (n_clients - half))
+    cuts = ([Cut(1, 2, 1, 2)] * half
+            + [Cut(2, 2, 2, 2)] * (n_clients - half))
+    groups = group_by_profile(devices, cuts)
+    rng = np.random.default_rng(seed)
+    params = {}
+    for g in groups:
+        owned = client_owned_layers((g.cut.g_h, g.cut.g_t), 2)
+        params[g.name] = {"G": {
+            str(l): {"w": jnp.asarray(rng.standard_normal(
+                (g.size, d_layer), dtype=np.float32))}
+            for l in owned}}
+    weights = rng.random(n_clients)
+    labels = np.arange(n_clients) % N_CLUSTERS
+    return groups, params, weights, labels
+
+
+def _run_chunked(report, tiny):
+    from repro.core.federation import get_federation_plan
+    for n_clients, chunk, d_layer in (CHUNK_SCALES_TINY if tiny
+                                      else CHUNK_SCALES):
+        groups, params, weights, labels = _chunk_population(n_clients,
+                                                            d_layer)
+        tmpl = {g.name: params[g.name]["G"] for g in groups}
+        cache = {}
+        plan = get_federation_plan(groups, "G", 2, tmpl, plan_cache=cache,
+                                   chunk_size=chunk)
+        dense_b = plan.dense_buffer_bytes()
+        work_b = plan.chunked_buffer_bytes(N_CLUSTERS)
+        mem = (f"workset={work_b / 2**20:.2f}MB "
+               f"dense={dense_b / 2**20:.1f}MB "
+               f"ratio={dense_b / work_b:.0f}x")
+
+        def fed(**kw):
+            return federate_client_params(groups, params, weights, labels,
+                                          n_layers={"G": 2},
+                                          plan_cache=cache, **kw)
+
+        us_chunk = _bench(lambda: fed(chunk_size=chunk), iters=2)
+        scale = f"{n_clients}c_chunk{chunk}_d{2 * d_layer}"
+        if dense_b <= MEM_ENVELOPE_BYTES:
+            us_dense = _bench(lambda: fed(), iters=2)
+            report(f"federation/chunked_round_{scale}", us_chunk,
+                   f"{mem}; dense round {us_dense:.0f}us "
+                   f"({us_chunk / us_dense:.2f}x)")
+            report(f"federation/dense_round_{n_clients}c_d{2 * d_layer}",
+                   us_dense, mem)
+        else:
+            report(f"federation/chunked_round_{scale}", us_chunk,
+                   f"{mem}; dense buffer exceeds the "
+                   f"{MEM_ENVELOPE_BYTES / 2**20:.0f}MB envelope -> "
+                   "dense wall clock skipped")
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,9 @@ Sections:
   latency    — paper Tables 15/16/24/27 (analytic, exact reproduction)
   kernels    — Pallas kernel micro-benches
   federation — fused vs legacy Eq.-16 federation round (32 clients)
+               plus the chunk-streamed population-scale round at 1k/8k
+               clients (``--fed-tiny`` keeps a 256-client chunked-only
+               variant for CI)
   cluster    — stage-3/4 clustered round: host numpy vs device-resident
                jitted/kernel path at 32/128 clients (``--cluster-tiny``
                keeps only the 32-client scale for CI)
@@ -45,6 +48,9 @@ def main() -> None:
                     help="train section at 2 clients x 2 steps (CI smoke)")
     ap.add_argument("--cluster-tiny", action="store_true",
                     help="cluster section at 32 clients only (CI smoke)")
+    ap.add_argument("--fed-tiny", action="store_true",
+                    help="federation section: chunk-streamed round only, "
+                         "at 256 clients (CI smoke)")
     args = ap.parse_args()
 
     rows = []
@@ -69,7 +75,7 @@ def main() -> None:
         kernel_bench.run(_report)
     if "federation" in sections:
         from benchmarks import federation_bench
-        federation_bench.run(_report)
+        federation_bench.run(_report, tiny=args.fed_tiny)
     if "cluster" in sections:
         from benchmarks import cluster_bench
         cluster_bench.run(_report, tiny=args.cluster_tiny)

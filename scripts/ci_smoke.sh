@@ -44,4 +44,10 @@ python -m benchmarks.run --only train --train-tiny \
 python -m benchmarks.run --only cluster --cluster-tiny \
     --json results/bench_federation.json
 
+# Chunk-streamed population round, tiny config (256 clients, chunk 64):
+# keeps the O(chunk + clusters) streaming path compiling/running and
+# its workset-vs-dense memory ratio on the same trajectory.
+python -m benchmarks.run --only federation --fed-tiny \
+    --json results/bench_federation.json
+
 echo "ci_smoke: OK"

@@ -10,7 +10,10 @@ from repro.core.clustering import (cluster_activations, cluster_activations_jax,
 from repro.core.kld import (activation_weights, activation_weights_jax,
                             label_weights, federation_weights,
                             federation_weights_jax, global_weights,
+                            cohort_federation_weights,
+                            cohort_federation_weights_jax,
                             kl_divergence)
+from repro.core.registry import ClientRegistry
 from repro.core.splitting import ProfileGroup, group_by_profile
 from repro.core.federation import (federate_client_params,
                                    federate_client_params_device,

@@ -46,6 +46,24 @@ the block-diagonal weight matrix in-jit
 (layer, cluster-id < k bound), so the segment count is fixed by the
 static ``k_selection_bound`` and never retraces as the selected k
 moves round to round.
+
+Chunk-streamed round (DESIGN.md §Chunk-streamed aggregation): with
+``chunk_size=`` the dense ``[K, D]`` buffer is never materialized —
+``aggregate_chunked`` ``lax.scan``s each profile group's stacked rows
+in fixed-size chunks, contracting one ``A_c [S, c] @ theta_c [c, D]``
+tile per chunk (the Pallas ``clustered_agg`` kernel when
+``use_kernel=True``) into a running per-segment ``(acc [S, D],
+mass [S])`` accumulator, and normalizes once at the end:
+``agg = acc / mass``. Round working set is O(chunk + clusters),
+independent of the client count; the re-associated summation makes
+equivalence with the dense paths tolerance-bounded, not bit-exact.
+With ``cohort_size``/``cohort_mask`` only the sampled cohort's
+(pre-renormalized, ``kld.cohort_federation_weights_jax``) weights are
+non-zero and non-members get their original params back via a
+recv-select in ``_unflatten``. Sharding composes: each shard streams
+its local row block of every group's leaf stacks (requires per-group
+divisibility — ``sharding.policy.group_client_axes``) and one psum
+merges the partial (acc, mass).
 """
 from __future__ import annotations
 
@@ -59,7 +77,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.splitting import ProfileGroup, client_owned_layers, layer_pair
-from repro.sharding.policy import client_axes
+from repro.sharding.policy import client_axes, group_client_axes
 
 # Segment-count padding: round the number of (layer, cluster) blocks up
 # so A's leading dim takes few distinct values (bounds jit retraces as
@@ -133,14 +151,26 @@ class FederationPlan:
     the single-device path when K is not divisible by the mesh (or
     the mesh is trivial). Plans are cached per mesh identity — see
     ``get_federation_plan``.
+
+    ``chunk_size``: enables ``aggregate_chunked`` — the round streams
+    each group's stacked rows in chunks of this many clients instead
+    of building the dense ``[K, D]`` buffer (O(chunk + clusters)
+    memory). ``cohort_size``: declared per-round participant count
+    (part of the plan cache key so cohort and full-participation
+    rounds never share a jitted program; the actual cohort arrives per
+    call as ``cohort_mask``).
     """
 
     def __init__(self, groups: Sequence[ProfileGroup], net: str,
                  n_layers: int, template: Dict[str, Dict[str, Any]],
-                 mesh: Optional[Mesh] = None):
+                 mesh: Optional[Mesh] = None,
+                 chunk_size: Optional[int] = None,
+                 cohort_size: Optional[int] = None):
         self.net = net
         self.n_layers = n_layers
         self.mesh = mesh
+        self.chunk_size = None if chunk_size is None else int(chunk_size)
+        self.cohort_size = None if cohort_size is None else int(cohort_size)
         # rows: one per client copy, groups in canonical order
         self._group_rows: Dict[str, Tuple[int, int]] = {}
         self.row_cids: List[int] = []
@@ -214,12 +244,20 @@ class FederationPlan:
             self._copy_cid[e.sid0:e.sid1] = cids_arr[e.row0:e.row1]
         self._owned = owned
         self._groups_order = [g.name for g in groups]
-        self._agg_fns: Dict[Tuple[bool, bool], Callable] = {}
+        self._agg_fns: Dict[Tuple, Callable] = {}
         # client-axis placement: the divisibility-aware sanitize drops
         # the axes (-> None -> single-device path) when K % mesh != 0
         # or the mesh axes multiply to 1.
         self._client_axes = (None if mesh is None or self.n_rows == 0
                              else client_axes(mesh, self.n_rows))
+        # chunk-streamed sharding splits each group's stacked leaves on
+        # their leading axis, so it needs *per-group* divisibility — a
+        # stricter condition than the dense buffer's total-row check.
+        group_sizes = [r1 - r0 for r0, r1 in self._group_rows.values()
+                       if r1 > r0]
+        self._chunk_axes = (None if mesh is None or self.chunk_size is None
+                            or not group_sizes
+                            else group_client_axes(mesh, group_sizes))
 
     # -- host-side weight matrix (Eq. 15/16 block diagonal) ----------------
     def weight_segments(self, weights: np.ndarray, cluster_labels: np.ndarray
@@ -261,7 +299,8 @@ class FederationPlan:
 
     # -- device-side weight matrix (traced twin, in-jit) -------------------
     def device_weight_segments(self, weights: jnp.ndarray,
-                               labels: jnp.ndarray, num_clusters: int
+                               labels: jnp.ndarray, num_clusters: int,
+                               participation: Optional[jnp.ndarray] = None
                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Traced twin of ``weight_segments``: assemble (A [S, K],
         seg_ids [n_copies]) from *device* per-client weights/labels so
@@ -275,21 +314,29 @@ class FederationPlan:
         retraces as the silhouette-selected k moves. Rows of empty
         segments are zero and never gathered (their seg_id is never
         produced); a present segment whose member weights sum to zero
-        falls back to uniform over its members, like the host path."""
+        falls back to uniform over its members, like the host path.
+        ``participation`` ([K] 0/1, default all-ones) restricts that
+        fallback to the round's cohort — a segment whose cohort
+        weight-mass underflows goes uniform over its *participating*
+        members, and a segment with no participants gets a zero row
+        (its non-member copies are recv-select-restored)."""
         C = int(num_clusters)
         n_seg = len(self._layer_rows) * C
         S = max(_SEGMENT_PAD, -(-n_seg // _SEGMENT_PAD) * _SEGMENT_PAD)
         A = jnp.zeros((S, self.n_rows), jnp.float32)
         w = weights.astype(jnp.float32)
+        part = (jnp.ones_like(w) if participation is None
+                else participation.astype(jnp.float32))
         for li, (l, rows, cids) in enumerate(self._layer_rows):
             lab = labels[cids]                                     # [R]
             onehot = jax.nn.one_hot(lab, C, dtype=jnp.float32)     # [R, C]
             raw = onehot * w[cids][:, None]
             denom = raw.sum(0)                                     # [C]
-            cnt = onehot.sum(0)
+            mem = onehot * part[cids][:, None]
+            cnt = mem.sum(0)
             blk = jnp.where(denom > 0,
                             raw / jnp.where(denom > 0, denom, 1.0),
-                            onehot / jnp.maximum(cnt, 1.0))        # [R, C]
+                            mem / jnp.maximum(cnt, 1.0))           # [R, C]
             A = A.at[li * C:(li + 1) * C, rows].set(blk.T)
         seg_ids = (jnp.asarray(self._copy_layer_pos[:self.n_copies]) * C
                    + labels[jnp.asarray(self._copy_cid[:self.n_copies])]
@@ -316,17 +363,34 @@ class FederationPlan:
             bufs.append(jnp.concatenate(parts, axis=1))
         return jnp.concatenate(bufs, axis=0)
 
-    def _unflatten(self, agg: jnp.ndarray, seg_ids: jnp.ndarray
+    def _unflatten(self, agg: jnp.ndarray, seg_ids: jnp.ndarray,
+                   originals: Optional[Dict[str, Dict[str, Any]]] = None,
+                   recv: Optional[jnp.ndarray] = None
                    ) -> Dict[str, Dict[str, Any]]:
+        """``recv`` ([n_copies] bool, with ``originals`` = the
+        pre-round net_params): cohort recv-select — copies whose
+        client did not participate this round keep their original
+        leaves instead of gathering a segment aggregate they took no
+        part in (which may be garbage when their whole (layer,
+        cluster ∩ cohort) is empty)."""
         out: Dict[str, Dict[str, Any]] = {}
         for e in self.entries:
             block = jnp.take(agg[:, e.col0:e.col0 + e.width],
                              seg_ids[e.sid0:e.sid1], axis=0)
+            mask = None if recv is None else recv[e.sid0:e.sid1]
+            orig_leaves = (None if originals is None else
+                           jax.tree_util.tree_leaves(
+                               originals[e.gname][str(e.layer)]))
             leaves, off = [], 0
-            for s in e.leaves:
-                leaves.append(block[:, off:off + s.size]
-                              .reshape((e.row1 - e.row0,) + s.shape)
-                              .astype(s.dtype))
+            for i, s in enumerate(e.leaves):
+                leaf = (block[:, off:off + s.size]
+                        .reshape((e.row1 - e.row0,) + s.shape)
+                        .astype(s.dtype))
+                if mask is not None:
+                    m = mask.reshape((e.row1 - e.row0,)
+                                     + (1,) * len(s.shape))
+                    leaf = jnp.where(m, leaf, orig_leaves[i])
+                leaves.append(leaf)
                 off += s.size
             out.setdefault(e.gname, {})[str(e.layer)] = \
                 jax.tree_util.tree_unflatten(e.treedef, leaves)
@@ -369,59 +433,302 @@ class FederationPlan:
                          in_specs=(P(None, axes), P(axes, None)),
                          out_specs=P(None, None), check_rep=False)
 
-    def _make_agg_fn(self, use_kernel: bool, donate: bool) -> Callable:
+    def _make_agg_fn(self, use_kernel: bool, donate: bool,
+                     with_cohort: bool = False) -> Callable:
         reduce = self._reduce_fn(use_kernel)
         theta_sharding = (None if self._client_axes is None else
                           NamedSharding(self.mesh, P(self._client_axes, None)))
 
-        def fn(net_params, A, seg_ids):
+        def core(net_params, A, seg_ids):
             theta = self._flatten(net_params)
             if theta_sharding is not None:
                 theta = jax.lax.with_sharding_constraint(theta, theta_sharding)
-            agg = reduce(A, theta)
-            return self._unflatten(agg, seg_ids)
+            return reduce(A, theta)
+
+        if with_cohort:
+            def fn(net_params, A, seg_ids, recv):
+                agg = core(net_params, A, seg_ids)
+                return self._unflatten(agg, seg_ids,
+                                       originals=net_params, recv=recv)
+        else:
+            def fn(net_params, A, seg_ids):
+                return self._unflatten(core(net_params, A, seg_ids), seg_ids)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
     def aggregate(self, net_params: Dict[str, Dict[str, Any]],
                   A: np.ndarray, seg_ids: np.ndarray,
                   use_kernel: bool = False,
-                  donate: bool = False) -> Dict[str, Dict[str, Any]]:
-        key = (use_kernel, donate)
+                  donate: bool = False,
+                  cohort_mask: Optional[np.ndarray] = None
+                  ) -> Dict[str, Dict[str, Any]]:
+        key = (use_kernel, donate, cohort_mask is not None)
         if key not in self._agg_fns:
-            self._agg_fns[key] = self._make_agg_fn(use_kernel, donate)
-        return self._agg_fns[key](net_params, jnp.asarray(A, jnp.float32),
-                                  jnp.asarray(seg_ids, jnp.int32))
+            self._agg_fns[key] = self._make_agg_fn(
+                use_kernel, donate, cohort_mask is not None)
+        args = [net_params, jnp.asarray(A, jnp.float32),
+                jnp.asarray(seg_ids, jnp.int32)]
+        if cohort_mask is not None:
+            recv = np.asarray(cohort_mask, bool)[
+                self._copy_cid[:self.n_copies]]
+            args.append(jnp.asarray(recv))
+        return self._agg_fns[key](*args)
 
     def _make_agg_device_fn(self, num_clusters: int, use_kernel: bool,
-                            donate: bool) -> Callable:
+                            donate: bool, with_cohort: bool = False
+                            ) -> Callable:
         reduce = self._reduce_fn(use_kernel)
         theta_sharding = (None if self._client_axes is None else
                           NamedSharding(self.mesh, P(self._client_axes, None)))
+        copy_cid = jnp.asarray(self._copy_cid[:self.n_copies])
 
-        def fn(net_params, weights, labels):
-            A, seg_ids = self.device_weight_segments(weights, labels,
-                                                     num_clusters)
+        def core(net_params, weights, labels, participation=None):
+            A, seg_ids = self.device_weight_segments(
+                weights, labels, num_clusters, participation=participation)
             theta = self._flatten(net_params)
             if theta_sharding is not None:
                 theta = jax.lax.with_sharding_constraint(theta, theta_sharding)
-            agg = reduce(A, theta)
-            return self._unflatten(agg, seg_ids)
+            return reduce(A, theta), seg_ids
+
+        if with_cohort:
+            def fn(net_params, weights, labels, cohort_mask):
+                agg, seg_ids = core(net_params, weights, labels,
+                                    cohort_mask.astype(jnp.float32))
+                recv = cohort_mask.astype(bool)[copy_cid]
+                return self._unflatten(agg, seg_ids,
+                                       originals=net_params, recv=recv)
+        else:
+            def fn(net_params, weights, labels):
+                agg, seg_ids = core(net_params, weights, labels)
+                return self._unflatten(agg, seg_ids)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
     def aggregate_device(self, net_params: Dict[str, Dict[str, Any]],
                          weights: jnp.ndarray, labels: jnp.ndarray,
                          num_clusters: int, use_kernel: bool = False,
-                         donate: bool = False) -> Dict[str, Dict[str, Any]]:
+                         donate: bool = False,
+                         cohort_mask: Optional[jnp.ndarray] = None
+                         ) -> Dict[str, Dict[str, Any]]:
         """Device-resident round: weights/labels are per-client device
         arrays (label ids < the static ``num_clusters`` bound); the
         Eq.-15/16 weight matrix is assembled in-jit — no host numpy
         between the inputs and the aggregated params. weights/labels
-        are never donated (the caller reuses them across nets)."""
-        key = ("device", int(num_clusters), use_kernel, donate)
+        are never donated (the caller reuses them across nets).
+        ``cohort_mask`` ([K] bool, weights pre-renormalized over the
+        cohort — ``kld.cohort_federation_weights_jax``): non-members
+        keep their original params via the recv-select."""
+        key = ("device", int(num_clusters), use_kernel, donate,
+               cohort_mask is not None)
         if key not in self._agg_fns:
             self._agg_fns[key] = self._make_agg_device_fn(
-                int(num_clusters), use_kernel, donate)
+                int(num_clusters), use_kernel, donate,
+                cohort_mask is not None)
+        if cohort_mask is not None:
+            return self._agg_fns[key](net_params, weights, labels,
+                                      cohort_mask)
         return self._agg_fns[key](net_params, weights, labels)
+
+    # -- chunk-streamed round (DESIGN.md §Chunk-streamed aggregation) ------
+    def _accumulate_chunks(self, net_params, cids_by_group, w_all, lab_all,
+                           part_all, zero_seg, num_clusters: int, chunk: int,
+                           use_kernel: bool):
+        """Stream every group's stacked rows in fixed-size chunks,
+        contracting one ``A_c [S, c] @ theta_c [c, D]`` tile per chunk
+        into the scan-carried ``(acc [S, D], mass [S])`` accumulator
+        (XLA donates the carry in place). ``zero_seg`` [S] marks
+        segments whose raw weight mass is zero but have participating
+        members — their members switch to their ``part_all`` value
+        (1.0 for participants, 0 outside the cohort), reproducing the
+        dense paths' uniform-over-participants fallback without
+        knowing the total mid-stream. Runs on the *local* row block
+        under shard_map (leaf leading dims and cids are shard-local
+        there); returns unnormalized (acc, mass)."""
+        C = int(num_clusters)
+        Lpos = len(self._layer_rows)
+        S = zero_seg.shape[0]
+        c = int(chunk)
+        sorted_runs = sorted(self._col_runs.items())
+        acc = jnp.zeros((S, self.n_cols), jnp.float32)
+        mass = jnp.zeros(S, jnp.float32)
+        for gname in self._groups_order:
+            cids_g = cids_by_group[gname]
+            Kg = int(cids_g.shape[0])
+            if Kg == 0:
+                continue
+            owned = self._owned[gname]
+
+            def body(carry, i, gname=gname, cids_g=cids_g, Kg=Kg,
+                     owned=owned):
+                acc, mass = carry
+                idx = i * c + jnp.arange(c)
+                # JAX clamps out-of-range dynamic indices, which would
+                # double-count the last row on the tail chunk — clamp
+                # explicitly and zero the weights of the overhang.
+                valid = (idx < Kg).astype(jnp.float32)
+                idxc = jnp.minimum(idx, Kg - 1)
+                cid_c = cids_g[idxc]
+                lab_c = lab_all[cid_c]
+                w_c = w_all[cid_c]
+                fb_c = part_all[cid_c]
+                onehot = jax.nn.one_hot(lab_c, C, dtype=jnp.float32)
+                parts = []
+                for l, (c0, wdt) in sorted_runs:
+                    if l in owned:
+                        leaves = jax.tree_util.tree_leaves(
+                            net_params[gname][str(l)])
+                        parts.append(jnp.concatenate(
+                            [jnp.take(x, idxc, axis=0).reshape(c, -1)
+                             .astype(jnp.float32) for x in leaves],
+                            axis=1))
+                    else:
+                        parts.append(jnp.zeros((c, wdt), jnp.float32))
+                theta_c = jnp.concatenate(parts, axis=1)         # [c, D]
+                ablocks = []
+                for li, (l, _, _) in enumerate(self._layer_rows):
+                    if l in owned:
+                        w_eff = jnp.where(zero_seg[li * C + lab_c],
+                                          fb_c, w_c) * valid
+                        ablocks.append(onehot.T * w_eff[None, :])
+                    else:
+                        ablocks.append(jnp.zeros((C, c), jnp.float32))
+                if S > Lpos * C:
+                    ablocks.append(jnp.zeros((S - Lpos * C, c),
+                                             jnp.float32))
+                A_c = jnp.concatenate(ablocks, axis=0)           # [S, c]
+                if use_kernel:
+                    from repro.kernels import ops as kops
+                    part = kops.clustered_agg(A_c, theta_c)
+                else:
+                    part = A_c @ theta_c
+                return (acc + part.astype(jnp.float32),
+                        mass + A_c.sum(1)), None
+
+            (acc, mass), _ = jax.lax.scan(body, (acc, mass),
+                                          jnp.arange(-(-Kg // c)))
+        return acc, mass
+
+    def _make_agg_chunked_fn(self, num_clusters: int, use_kernel: bool,
+                             donate: bool, with_cohort: bool) -> Callable:
+        C = int(num_clusters)
+        chunk = int(self.chunk_size)
+        n_seg = len(self._layer_rows) * C
+        S = max(_SEGMENT_PAD, -(-n_seg // _SEGMENT_PAD) * _SEGMENT_PAD)
+        n_cop = self.n_copies
+        copy_lpos = jnp.asarray(self._copy_layer_pos[:n_cop])
+        copy_cid = jnp.asarray(self._copy_cid[:n_cop])
+        cids_np = {g: np.asarray(self.row_cids[r0:r1], np.int32)
+                   for g, (r0, r1) in self._group_rows.items()}
+        axes = self._chunk_axes
+        axis_names = (() if axes is None else
+                      ((axes,) if isinstance(axes, str) else tuple(axes)))
+
+        def run(net_params, w_all, lab_all, cohort_mask=None):
+            w_all = w_all.astype(jnp.float32)
+            lab_all = lab_all.astype(jnp.int32)
+            # participation vector: 1.0 for clients in the round. The
+            # uniform fallback for a segment whose weight mass
+            # underflows goes uniform over *participants* only, and a
+            # (layer, cluster) with an empty cohort keeps mass 0 (its
+            # copies are recv-select-restored) — matching
+            # device_weight_segments' participation semantics.
+            part = (cohort_mask.astype(jnp.float32) if with_cohort
+                    else jnp.ones_like(w_all))
+            seg_of_copy = copy_lpos * C + lab_all[copy_cid]
+            raw = jax.ops.segment_sum(w_all[copy_cid], seg_of_copy,
+                                      num_segments=S)
+            cnt = jax.ops.segment_sum(part[copy_cid], seg_of_copy,
+                                      num_segments=S)
+            zero_seg = (raw <= 0) & (cnt > 0)
+            cids = {g: jnp.asarray(v) for g, v in cids_np.items()}
+            if axes is None:
+                acc, mass = self._accumulate_chunks(
+                    net_params, cids, w_all, lab_all, part, zero_seg,
+                    C, chunk, use_kernel)
+            else:
+                # Sharded stream: each shard holds a row block of every
+                # group's leaf stack (and the matching cids slice),
+                # scans its local chunks, and one psum merges the tiny
+                # (acc, mass) — same collective shape as the dense
+                # sharded reduction. check_rep=False: pallas_call has
+                # no shard_map replication rule.
+                def local(net_p, cids_l, w, lab, pt, zs):
+                    a, m = self._accumulate_chunks(
+                        net_p, cids_l, w, lab, pt, zs, C, chunk,
+                        use_kernel)
+                    return (jax.lax.psum(a, axis_names),
+                            jax.lax.psum(m, axis_names))
+                p_specs = jax.tree_util.tree_map(
+                    lambda x: P(axes, *([None] * (x.ndim - 1))),
+                    net_params)
+                c_specs = {g: P(axes) for g in cids}
+                acc, mass = shard_map(
+                    local, mesh=self.mesh,
+                    in_specs=(p_specs, c_specs, P(None), P(None),
+                              P(None), P(None)),
+                    out_specs=(P(None, None), P(None)),
+                    check_rep=False)(net_params, cids, w_all, lab_all,
+                                     part, zero_seg)
+            agg = acc / jnp.maximum(mass, 1e-20)[:, None]
+            seg_ids = seg_of_copy.astype(jnp.int32)
+            if with_cohort:
+                recv = cohort_mask.astype(bool)[copy_cid]
+                return self._unflatten(agg, seg_ids,
+                                       originals=net_params, recv=recv)
+            return self._unflatten(agg, seg_ids)
+
+        if with_cohort:
+            def fn(net_params, weights, labels, cohort_mask):
+                return run(net_params, weights, labels, cohort_mask)
+        else:
+            def fn(net_params, weights, labels):
+                return run(net_params, weights, labels)
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    def aggregate_chunked(self, net_params: Dict[str, Dict[str, Any]],
+                          weights: jnp.ndarray, labels: jnp.ndarray,
+                          num_clusters: int, use_kernel: bool = False,
+                          donate: bool = False,
+                          cohort_mask: Optional[jnp.ndarray] = None
+                          ) -> Dict[str, Dict[str, Any]]:
+        """Chunk-streamed round (requires the plan to be built with
+        ``chunk_size=``): same signature semantics as
+        ``aggregate_device`` but the dense ``[K, D]`` buffer is never
+        built — partial sums + weight masses accumulate over a
+        ``lax.scan`` of client chunks and a single normalize at the
+        end divides them out. Equivalence with the dense paths is
+        tolerance-bounded (re-associated f32 summation), not
+        bit-exact."""
+        if self.chunk_size is None:
+            raise ValueError("plan was built without chunk_size; pass "
+                             "chunk_size= to get_federation_plan")
+        key = ("chunked", int(num_clusters), use_kernel, donate,
+               cohort_mask is not None)
+        if key not in self._agg_fns:
+            self._agg_fns[key] = self._make_agg_chunked_fn(
+                int(num_clusters), use_kernel, donate,
+                cohort_mask is not None)
+        if cohort_mask is not None:
+            return self._agg_fns[key](net_params, weights, labels,
+                                      cohort_mask)
+        return self._agg_fns[key](net_params, weights, labels)
+
+    # -- memory envelopes --------------------------------------------------
+    def dense_buffer_bytes(self) -> int:
+        """f32 bytes of the dense ``theta [K, D]`` flat client buffer
+        the non-chunked paths materialize (the O(clients) term the
+        chunk stream eliminates)."""
+        return 4 * self.n_rows * self.n_cols
+
+    def chunked_buffer_bytes(self, num_clusters: int) -> int:
+        """f32 bytes of the chunk stream's working set: one
+        ``theta_c [c, D]`` + ``A_c [S, c]`` tile plus the carried
+        ``(acc [S, D], mass [S])`` — O(chunk + clusters), independent
+        of the client count."""
+        if self.chunk_size is None:
+            raise ValueError("plan was built without chunk_size")
+        n_seg = len(self._layer_rows) * int(num_clusters)
+        S = max(_SEGMENT_PAD, -(-n_seg // _SEGMENT_PAD) * _SEGMENT_PAD)
+        c = int(self.chunk_size)
+        return 4 * (c * self.n_cols + S * c + S * self.n_cols + S)
 
 
 _PLAN_CACHE: Dict[Tuple, FederationPlan] = {}
@@ -429,14 +736,20 @@ _PLAN_CACHE: Dict[Tuple, FederationPlan] = {}
 
 def _plan_key(groups: Sequence[ProfileGroup], net: str, n_layers: int,
               template: Dict[str, Dict[str, Any]],
-              mesh: Optional[Mesh] = None) -> Tuple:
+              mesh: Optional[Mesh] = None,
+              chunk_size: Optional[int] = None,
+              cohort_size: Optional[int] = None) -> Tuple:
     # The leaf-layout fingerprint guards the shared cache against two
     # same-topology populations with differently-shaped layer params
     # (walking ~100 aval objects per round is noise next to the round).
     # Mesh identity is part of the key: a plan bakes its shard_map /
     # sharding constraints to one mesh, so the same topology on a
     # different mesh (or none) must get its own plan (jax.sharding.Mesh
-    # hashes by device assignment + axis names).
+    # hashes by device assignment + axis names). (chunk_size,
+    # cohort_size) join it for the same reason: the chunked scan and
+    # the cohort recv-select are baked into the plan's jitted programs,
+    # so a dense full-participation round must never reuse a chunked /
+    # cohort plan (or vice versa).
     layout = tuple(
         (g.name, tuple(
             (l, tuple((tuple(x.shape), str(x.dtype)) for x in
@@ -445,19 +758,23 @@ def _plan_key(groups: Sequence[ProfileGroup], net: str, n_layers: int,
         for g in groups)
     return (net, n_layers, tuple(
         (g.name, g.cut.as_tuple(), tuple(g.client_ids)) for g in groups),
-        layout, mesh)
+        layout, mesh, chunk_size, cohort_size)
 
 
 def get_federation_plan(groups: Sequence[ProfileGroup], net: str,
                         n_layers: int,
                         template: Dict[str, Dict[str, Any]],
                         plan_cache: Optional[Dict] = None,
-                        mesh: Optional[Mesh] = None) -> FederationPlan:
+                        mesh: Optional[Mesh] = None,
+                        chunk_size: Optional[int] = None,
+                        cohort_size: Optional[int] = None) -> FederationPlan:
     cache = _PLAN_CACHE if plan_cache is None else plan_cache
-    key = _plan_key(groups, net, n_layers, template, mesh)
+    key = _plan_key(groups, net, n_layers, template, mesh,
+                    chunk_size=chunk_size, cohort_size=cohort_size)
     if key not in cache:
         cache[key] = FederationPlan(groups, net, n_layers, template,
-                                    mesh=mesh)
+                                    mesh=mesh, chunk_size=chunk_size,
+                                    cohort_size=cohort_size)
     return cache[key]
 
 
@@ -487,7 +804,9 @@ def federate_client_params(groups: Sequence[ProfileGroup],
                            fused: bool = True,
                            plan_cache: Optional[Dict] = None,
                            donate: Optional[bool] = None,
-                           mesh: Optional[Mesh] = None
+                           mesh: Optional[Mesh] = None,
+                           chunk_size: Optional[int] = None,
+                           cohort_mask: Optional[np.ndarray] = None
                            ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Aggregate client-held layers cluster-wise.
 
@@ -496,7 +815,8 @@ def federate_client_params(groups: Sequence[ProfileGroup],
     cluster_labels: cluster id per global client id.
     fused=True runs the single-dispatch flat-buffer path (one jitted
     call per net; Pallas kernel when use_kernel); fused=False runs the
-    legacy per-(layer, cluster, leaf) loop (correctness oracle).
+    legacy per-(layer, cluster, leaf) loop (correctness oracle —
+    full-participation dense rounds only).
     donate=True aliases the input buffers into the jitted round —
     only safe when the caller drops every reference to client_params
     afterwards (the trainer does; pass ``donate_default()``). The
@@ -506,10 +826,20 @@ def federate_client_params(groups: Sequence[ProfileGroup],
     mesh's ('pod', 'data') axes and reduces via shard_map partial-sums
     + psum (see FederationPlan); ``None`` keeps today's single-device
     path unchanged. Non-divisible client counts fall back silently.
+    chunk_size=c streams the round in c-client chunks instead of
+    building the dense [K, D] buffer (tolerance-bounded equivalence —
+    see FederationPlan.aggregate_chunked). cohort_mask ([n_clients]
+    bool) runs a sampled-cohort round: ``weights`` must already be
+    renormalized over the cohort (``kld.cohort_federation_weights``,
+    zero outside it) and non-members keep their original params.
     Returns a new client_params with aggregated copies broadcast back.
     """
     n_layers = n_layers or _default_n_layers()
     if not fused:
+        if chunk_size is not None or cohort_mask is not None:
+            raise ValueError("the legacy loop is a full-participation "
+                             "dense oracle: chunk_size/cohort_mask "
+                             "require fused=True")
         return _federate_client_params_legacy(
             groups, client_params, weights, cluster_labels,
             n_layers=n_layers, use_kernel=use_kernel)
@@ -517,16 +847,30 @@ def federate_client_params(groups: Sequence[ProfileGroup],
         donate = False
     weights = np.asarray(weights)
     cluster_labels = np.asarray(cluster_labels)
+    cohort_size = (None if cohort_mask is None
+                   else int(np.asarray(cohort_mask, bool).sum()))
     out = {gname: dict(nets) for gname, nets in client_params.items()}
     for net, n_lay in n_layers.items():
         template = {g.name: client_params[g.name][net] for g in groups}
         plan = get_federation_plan(groups, net, n_lay, template,
-                                   plan_cache=plan_cache, mesh=mesh)
+                                   plan_cache=plan_cache, mesh=mesh,
+                                   chunk_size=chunk_size,
+                                   cohort_size=cohort_size)
         if plan.n_rows == 0:
             continue
-        A, seg_ids = plan.weight_segments(weights, cluster_labels)
-        new_net = plan.aggregate(template, A, seg_ids,
-                                 use_kernel=use_kernel, donate=donate)
+        if chunk_size is not None:
+            new_net = plan.aggregate_chunked(
+                template, jnp.asarray(weights, jnp.float32),
+                jnp.asarray(cluster_labels, jnp.int32),
+                num_clusters=int(cluster_labels.max()) + 1,
+                use_kernel=use_kernel, donate=donate,
+                cohort_mask=None if cohort_mask is None
+                else jnp.asarray(np.asarray(cohort_mask, bool)))
+        else:
+            A, seg_ids = plan.weight_segments(weights, cluster_labels)
+            new_net = plan.aggregate(template, A, seg_ids,
+                                     use_kernel=use_kernel, donate=donate,
+                                     cohort_mask=cohort_mask)
         for g in groups:
             if g.name in new_net:
                 out[g.name][net] = new_net[g.name]
@@ -543,7 +887,10 @@ def federate_client_params_device(
         use_kernel: bool = False,
         plan_cache: Optional[Dict] = None,
         donate: Optional[bool] = None,
-        mesh: Optional[Mesh] = None
+        mesh: Optional[Mesh] = None,
+        chunk_size: Optional[int] = None,
+        cohort_mask: Optional[jnp.ndarray] = None,
+        cohort_size: Optional[int] = None
         ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Device-resident twin of ``federate_client_params``: weights and
     cluster_labels are *device* arrays (e.g. straight out of the jitted
@@ -551,19 +898,33 @@ def federate_client_params_device(
     chain) and the A matrix + seg_ids are assembled in-jit, so the
     round performs zero host<->device transfers of activations, labels,
     or weights. ``num_clusters`` is the static label-id bound
-    (``clustering.k_selection_bound``) that fixes the segment count."""
+    (``clustering.k_selection_bound``) that fixes the segment count.
+    chunk_size streams the round (``aggregate_chunked``); cohort_mask
+    ([K] bool device array, weights pre-renormalized over the cohort)
+    runs a sampled-cohort round — pass the static ``cohort_size``
+    alongside so the plan cache separates cohort programs (the mask
+    itself never leaves the device)."""
     n_layers = n_layers or _default_n_layers()
     donate = bool(donate)
     out = {gname: dict(nets) for gname, nets in client_params.items()}
     for net, n_lay in n_layers.items():
         template = {g.name: client_params[g.name][net] for g in groups}
         plan = get_federation_plan(groups, net, n_lay, template,
-                                   plan_cache=plan_cache, mesh=mesh)
+                                   plan_cache=plan_cache, mesh=mesh,
+                                   chunk_size=chunk_size,
+                                   cohort_size=cohort_size)
         if plan.n_rows == 0:
             continue
-        new_net = plan.aggregate_device(template, weights, cluster_labels,
-                                        num_clusters, use_kernel=use_kernel,
-                                        donate=donate)
+        if chunk_size is not None:
+            new_net = plan.aggregate_chunked(
+                template, weights, cluster_labels, num_clusters,
+                use_kernel=use_kernel, donate=donate,
+                cohort_mask=cohort_mask)
+        else:
+            new_net = plan.aggregate_device(
+                template, weights, cluster_labels, num_clusters,
+                use_kernel=use_kernel, donate=donate,
+                cohort_mask=cohort_mask)
         for g in groups:
             if g.name in new_net:
                 out[g.name][net] = new_net[g.name]
@@ -625,14 +986,25 @@ def fedavg_uniform(groups: Sequence[ProfileGroup],
                    fused: bool = True,
                    plan_cache: Optional[Dict] = None,
                    donate: Optional[bool] = None,
-                   mesh: Optional[Mesh] = None
+                   mesh: Optional[Mesh] = None,
+                   chunk_size: Optional[int] = None,
+                   cohort_mask: Optional[np.ndarray] = None
                    ) -> Dict[str, Dict[str, Dict[str, Any]]]:
     """Vanilla FedAvg (first two federation rounds, paper §4.5): the
     degenerate single-cluster case of the fused path — one global
-    cluster, weights proportional to dataset size."""
-    weights = sizes.astype(np.float64) / sizes.sum()
+    cluster, weights proportional to dataset size. With cohort_mask,
+    sizes renormalize over the cohort and non-members sit the round
+    out (same recv-select as the clustered cohort round)."""
+    sizes = np.asarray(sizes, np.float64)
+    if cohort_mask is not None:
+        sized = sizes * np.asarray(cohort_mask, bool)
+        weights = sized / sized.sum()
+    else:
+        weights = sizes / sizes.sum()
     labels = np.zeros(len(sizes), np.int64)
     return federate_client_params(groups, client_params, weights, labels,
                                   n_layers=n_layers, use_kernel=use_kernel,
                                   fused=fused, plan_cache=plan_cache,
-                                  donate=donate, mesh=mesh)
+                                  donate=donate, mesh=mesh,
+                                  chunk_size=chunk_size,
+                                  cohort_mask=cohort_mask)

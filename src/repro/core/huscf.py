@@ -35,6 +35,7 @@ from repro.core.federation import (donate_default, federate_client_params,
                                    fedavg_uniform)
 from repro.core.genetic import GAConfig, optimize_cuts
 from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
+from repro.core.registry import ClientRegistry
 from repro.core.splitting import (ProfileGroup, group_by_profile, layer_pair,
                                   server_union_span)
 from repro.data.partition import ClientSpec
@@ -79,6 +80,17 @@ class HuSCFConfig:
     # while-loop body runs its convs single-threaded — measured ~2.3x
     # per-step wall on 2 cores), 1 (true scan, O(1) compile) on
     # TPU/GPU where the loop body parallelizes fine.
+    cohort_size: Optional[int] = None
+    # per-round participant count: each federate() samples this many of
+    # the registered clients (core/registry.py) from a dedicated PRNG
+    # chain; Eq. 15 weights renormalize over the cohort and everyone
+    # else keeps their params. None = full participation (paper
+    # default).
+    agg_chunk: Optional[int] = None
+    # chunk-streamed aggregation: the round scans client chunks of this
+    # size instead of materializing the dense [K, D] buffer
+    # (federation.FederationPlan.aggregate_chunked, O(chunk + clusters)
+    # memory). None = dense fused round.
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +298,14 @@ class HuSCFTrainer:
         # a dedicated cluster PRNG key split per round on device
         self._sizes_dev = jnp.asarray(self.sizes, jnp.float32)
         self._cluster_key = jax.random.PRNGKey(config.seed + 2)
+        # population registry + per-round cohort sampling (its own key
+        # chain so enabling cohorts never perturbs the cluster stream)
+        self.registry = ClientRegistry.from_clients(self.clients)
+        if config.cohort_size is not None and not (
+                1 <= config.cohort_size <= K):
+            raise ValueError(f"cohort_size {config.cohort_size} out of "
+                             f"range for {K} registered clients")
+        self._cohort_key = jax.random.PRNGKey(config.seed + 3)
         if fed_mesh is not None and fed_mesh.devices.size > 1:
             from jax.sharding import NamedSharding, PartitionSpec as P
             rep = NamedSharding(fed_mesh, P())
@@ -296,6 +316,7 @@ class HuSCFTrainer:
             self._ema_init = put(self._ema_init)
             self._sizes_dev = put(self._sizes_dev)
             self._cluster_key = put(self._cluster_key)
+            self._cohort_key = put(self._cohort_key)
         # fused-federation plans (treedefs/leaf shapes/layer offsets),
         # built on first round and reused so repeat rounds pay zero
         # host-side tree walking.
@@ -530,10 +551,27 @@ class HuSCFTrainer:
         mesh overrides the trainer's ``fed_mesh`` for this round
         (client-axis-sharded aggregation); pass ``mesh=None``
         explicitly to force the single-device path on a trainer that
-        has a ``fed_mesh``. Omitted = trainer default."""
+        has a ``fed_mesh``. Omitted = trainer default.
+
+        With ``cfg.cohort_size`` each round first samples its cohort
+        from the registry (dedicated PRNG chain, on device); Eq. 15
+        weights renormalize over the cohort and non-members keep their
+        params. ``cfg.agg_chunk`` streams the aggregation in client
+        chunks instead of the dense [K, D] buffer."""
         mesh = self.fed_mesh if mesh is self._MESH_DEFAULT else mesh
         self.fed_round += 1
+        cohort_ids = cohort_mask = None
+        if self.cfg.cohort_size is not None:
+            self._cohort_key, sub = jax.random.split(self._cohort_key)
+            cohort_ids = self.registry.sample_cohort(sub,
+                                                     self.cfg.cohort_size)
+            cohort_mask = self.registry.cohort_mask(cohort_ids)
         if self.fed_round <= self.cfg.warmup_fed_rounds:
+            # host fedavg path: the tiny cohort mask is the one
+            # readback (warmup rounds predate the device-resident chain
+            # anyway — cohort-critical runs set warmup_fed_rounds=0)
+            mask_np = (None if cohort_mask is None
+                       else np.asarray(cohort_mask))
             for net in ("G", "D"):
                 wrapped = {g.name: {net: self.state[net]["client"][g.name]}
                            for g in self.groups}
@@ -543,13 +581,18 @@ class HuSCFTrainer:
                                      n_layers={net: _N_LAYERS[net]},
                                      use_kernel=self.cfg.use_kernel,
                                      plan_cache=self._fed_plans,
-                                     donate=donate_default(), mesh=mesh)
+                                     donate=donate_default(), mesh=mesh,
+                                     chunk_size=self.cfg.agg_chunk,
+                                     cohort_mask=mask_np)
                 self.state[net]["client"] = {g.name: out[g.name][net]
                                              for g in self.groups}
-            return {"round": self.fed_round, "mode": "fedavg"}
+            diag = {"round": self.fed_round, "mode": "fedavg"}
+            if cohort_ids is not None:
+                diag["cohort"] = cohort_ids
+            return diag
 
         if self.cfg.fused_cluster and not use_label_kld:
-            return self._federate_fused(mesh)
+            return self._federate_fused(mesh, cohort_ids, cohort_mask)
 
         acts = self.middle_activations()
         cl = cluster_activations(acts, k=self.cfg.num_clusters,
@@ -562,6 +605,12 @@ class HuSCFTrainer:
         else:
             weights, klds = kld_mod.activation_weights(acts, self.sizes,
                                                        cl.labels, self.cfg.beta)
+        mask_np = None if cohort_mask is None else np.asarray(cohort_mask)
+        if mask_np is not None:
+            # KLDs stay full-cluster; only the Eq.-15 normalization
+            # restricts to the sampled participants.
+            weights = kld_mod.cohort_federation_weights(
+                klds, self.sizes, cl.labels, mask_np, self.cfg.beta)
         for net in ("G", "D"):
             wrapped = {g.name: {net: self.state[net]["client"][g.name]}
                        for g in self.groups}
@@ -570,44 +619,56 @@ class HuSCFTrainer:
                                          n_layers={net: _N_LAYERS[net]},
                                          use_kernel=self.cfg.use_kernel,
                                          plan_cache=self._fed_plans,
-                                         donate=donate_default(), mesh=mesh)
+                                         donate=donate_default(), mesh=mesh,
+                                         chunk_size=self.cfg.agg_chunk,
+                                         cohort_mask=mask_np)
             self.state[net]["client"] = {g.name: out[g.name][net]
                                          for g in self.groups}
-        return {"round": self.fed_round, "mode": "clustered",
+        diag = {"round": self.fed_round, "mode": "clustered",
                 "k": cl.k, "silhouette": cl.silhouette,
                 "labels": cl.labels, "weights": weights, "klds": klds}
+        if cohort_ids is not None:
+            diag["cohort"] = cohort_ids
+        return diag
 
     # -- device-resident stage 3+4 (fused_cluster) -------------------------
-    def _get_cluster_fn(self) -> Callable:
-        """Jitted (acts, sizes, key) -> (labels, k, sil, weights, klds)
-        — stage 3+4 compute in one dispatch. Cached per (beta,
-        num_clusters, use_kernel) because benchmarks mutate cfg fields
-        between rounds."""
+    def _get_cluster_fn(self, with_cohort: bool = False) -> Callable:
+        """Jitted (acts, sizes, key[, cohort_mask]) -> (labels, k, sil,
+        weights, klds) — stage 3+4 compute in one dispatch. Cached per
+        (beta, num_clusters, use_kernel, with_cohort) because
+        benchmarks mutate cfg fields between rounds."""
         key = (float(self.cfg.beta), self.cfg.num_clusters,
-               self.cfg.use_kernel)
+               self.cfg.use_kernel, with_cohort)
         fn = self._cluster_fns.get(key)
         if fn is None:
             beta, k_cfg = float(self.cfg.beta), self.cfg.num_clusters
             use_kernel = self.cfg.use_kernel
 
-            def cluster_weight(acts, sizes, key):
+            def cluster_weight(acts, sizes, key, cohort_mask=None):
                 labels, k_sel, sil = cluster_activations_jax(
                     acts, key, k=k_cfg, use_kernel=use_kernel)
                 weights, klds = kld_mod.activation_weights_jax(
                     acts, sizes, labels,
-                    k_selection_bound(acts.shape[0], k_cfg), beta)
+                    k_selection_bound(acts.shape[0], k_cfg), beta,
+                    cohort_mask=cohort_mask)
                 return labels, k_sel, sil, weights, klds
 
-            fn = self._cluster_fns[key] = jax.jit(cluster_weight)
+            if with_cohort:
+                fn = jax.jit(lambda a, s, k, m: cluster_weight(a, s, k, m))
+            else:
+                fn = jax.jit(lambda a, s, k: cluster_weight(a, s, k))
+            self._cluster_fns[key] = fn
         return fn
 
-    def _federate_fused(self, mesh) -> Dict[str, Any]:
+    def _federate_fused(self, mesh, cohort_ids=None,
+                        cohort_mask=None) -> Dict[str, Any]:
         """Clustered round without leaving the device: the EMA feeds
         the jitted cluster+weight chain, whose device labels/weights
         feed the in-jit weight-matrix aggregation — zero host<->device
         transfers of activations/labels/weights between train_steps
-        and the aggregated params. Diagnostics are device arrays
-        (reading them back is the caller's choice)."""
+        and the aggregated params; a sampled cohort (mask + ids device
+        arrays from the registry) stays on device too. Diagnostics are
+        device arrays (reading them back is the caller's choice)."""
         if not self._trained:
             # same failure mode as the oracle path's empty-EMA check,
             # but off a host flag: no device readback in this method
@@ -617,8 +678,12 @@ class HuSCFTrainer:
         acts = (self._mid_ema if self.cfg.fused_epoch
                 else jnp.asarray(self.middle_activations()))
         self._cluster_key, sub = jax.random.split(self._cluster_key)
-        labels, k_sel, sil, weights, klds = self._get_cluster_fn()(
-            acts, self._sizes_dev, sub)
+        if cohort_mask is not None:
+            labels, k_sel, sil, weights, klds = self._get_cluster_fn(
+                with_cohort=True)(acts, self._sizes_dev, sub, cohort_mask)
+        else:
+            labels, k_sel, sil, weights, klds = self._get_cluster_fn()(
+                acts, self._sizes_dev, sub)
         bound = k_selection_bound(len(self.clients), self.cfg.num_clusters)
         for net in ("G", "D"):
             wrapped = {g.name: {net: self.state[net]["client"][g.name]}
@@ -628,12 +693,18 @@ class HuSCFTrainer:
                 n_layers={net: _N_LAYERS[net]},
                 use_kernel=self.cfg.use_kernel,
                 plan_cache=self._fed_plans,
-                donate=donate_default(), mesh=mesh)
+                donate=donate_default(), mesh=mesh,
+                chunk_size=self.cfg.agg_chunk,
+                cohort_mask=cohort_mask,
+                cohort_size=self.cfg.cohort_size)
             self.state[net]["client"] = {g.name: out[g.name][net]
                                          for g in self.groups}
-        return {"round": self.fed_round, "mode": "clustered",
+        diag = {"round": self.fed_round, "mode": "clustered",
                 "k": k_sel, "silhouette": sil, "labels": labels,
                 "weights": weights, "klds": klds}
+        if cohort_ids is not None:
+            diag["cohort"] = cohort_ids
+        return diag
 
     # -- generation for evaluation ------------------------------------------
     def generate(self, n_per_client_batch: int, labels: np.ndarray

@@ -14,9 +14,13 @@ and stays size-weighted in the degenerate limit.
 
 Also provides the label-distribution-based variant (FeGAN-style,
 paper §6.3 comparison) which shares the same weighting equation but
-feeds label histograms instead of activations, and jit-compatible JAX
+feeds label histograms instead of activations, jit-compatible JAX
 twins (``*_jax``) of the Eq. 13-15 chain for the device-resident
-clustered round (DESIGN.md §Device-resident clustering).
+clustered round (DESIGN.md §Device-resident clustering), and the
+cohort-renormalized variants (``cohort_federation_weights[_jax]``)
+used when only a sampled cohort of the registered population
+participates in a round (core/registry.py, DESIGN.md §Chunk-streamed
+aggregation).
 """
 from __future__ import annotations
 
@@ -97,6 +101,28 @@ def global_weights(klds: np.ndarray, sizes: np.ndarray,
     return _softmax_masked(logits, np.ones(len(logits), bool))
 
 
+def cohort_federation_weights(klds: np.ndarray, sizes: np.ndarray,
+                              labels: np.ndarray, cohort: np.ndarray,
+                              beta: float = 150.0) -> np.ndarray:
+    """Eq. (15) renormalized over a sampled *cohort*: within each
+    cluster the softmax runs over the cohort members only, so the
+    participating clients' weights sum to 1 per (cluster ∩ cohort)
+    and every non-member gets exactly 0 (it contributes nothing to —
+    and receives nothing from — the round; see core/registry.py).
+
+    Same log-space form as ``federation_weights`` (softmax of
+    ``log n_k − beta KLD_k``), so beta=150 cannot underflow the sizes
+    away; a singleton cohort member in a cluster degenerates to
+    weight 1.0. ``cohort``: [K] bool participation mask."""
+    logits = _logits(klds, sizes, beta)
+    cohort = np.asarray(cohort, bool)
+    out = np.zeros_like(logits)
+    for c in np.unique(labels[cohort]):
+        mask = (labels == c) & cohort
+        out[mask] = _softmax_masked(logits, mask)
+    return out
+
+
 def activation_weights(acts: np.ndarray, sizes: np.ndarray,
                        labels: np.ndarray, beta: float = 150.0
                        ) -> Tuple[np.ndarray, np.ndarray]:
@@ -152,14 +178,51 @@ def federation_weights_jax(klds: jnp.ndarray, sizes: jnp.ndarray,
     return e / denom[labels]
 
 
+def cohort_federation_weights_jax(klds: jnp.ndarray, sizes: jnp.ndarray,
+                                  labels: jnp.ndarray,
+                                  cohort_mask: jnp.ndarray,
+                                  num_clusters: int,
+                                  beta: float = 150.0) -> jnp.ndarray:
+    """Traced twin of ``cohort_federation_weights``: within-cluster
+    log-space softmax restricted to the cohort, via masked one-hot
+    segment reductions. Non-members (and members of clusters with an
+    empty cohort) come out exactly 0; the seg-max shift is guarded so
+    an empty (cluster ∩ cohort) never produces a NaN."""
+    m = cohort_mask.astype(bool)
+    onehot = (jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)
+              * m[:, None].astype(jnp.float32))                    # [K, C]
+    logits = (jnp.log(jnp.maximum(sizes.astype(jnp.float32), 1e-30))
+              - beta * klds.astype(jnp.float32))
+    masked = jnp.where(onehot > 0, logits[:, None], -jnp.inf)
+    seg_max = masked.max(0)                                        # [C]
+    seg_max_safe = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = jnp.where(m, logits - seg_max_safe[labels], -jnp.inf)
+    e = jnp.exp(shifted)                                           # [K]
+    denom = onehot.T @ e                                           # [C]
+    d = denom[labels]
+    return jnp.where(m & (d > 0), e / jnp.where(d > 0, d, 1.0), 0.0)
+
+
 def activation_weights_jax(acts: jnp.ndarray, sizes: jnp.ndarray,
                            labels: jnp.ndarray, num_clusters: int,
-                           beta: float = 150.0
+                           beta: float = 150.0,
+                           cohort_mask: jnp.ndarray = None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """End-to-end Eq. 13-15 on device: returns (intra-cluster weights,
     klds) as device arrays. f32 (the numpy oracle runs f64 — agreement
-    is to fp tolerance, amplified by beta in the weights)."""
+    is to fp tolerance, amplified by beta in the weights).
+
+    ``cohort_mask`` (optional [K] bool) renormalizes the Eq.-15
+    weights over the sampled cohort instead of the whole cluster; the
+    KLDs themselves stay full-cluster (Eq. 14's leave-one-out mean is
+    over the cluster the server clustered, participation only gates
+    who synchronizes this round — DESIGN.md §Chunk-streamed
+    aggregation)."""
     P = jax.nn.softmax(acts.astype(jnp.float32), axis=-1)
     klds = cluster_klds_jax(P, labels, num_clusters)
-    return federation_weights_jax(klds, sizes, labels, num_clusters,
-                                  beta), klds
+    if cohort_mask is not None:
+        w = cohort_federation_weights_jax(klds, sizes, labels, cohort_mask,
+                                          num_clusters, beta)
+    else:
+        w = federation_weights_jax(klds, sizes, labels, num_clusters, beta)
+    return w, klds

@@ -1,0 +1,85 @@
+"""Client population registry + per-round cohort sampling.
+
+The paper's pitch is harnessing "many underutilized devices", and the
+related federated-GAN literature (EFFGAN, Federated Split GANs —
+PAPERS.md) assumes a *registry* of devices far larger than any one
+round's participant set: each round samples a cohort of S clients out
+of the N registered, trains/aggregates over the cohort, and leaves
+everyone else untouched until they are next drawn. ``ClientRegistry``
+models exactly that split between *registered* (known to the server:
+id, dataset size) and *participating* (sampled this round).
+
+Sampling runs on device from a ``jax.random`` key (a permutation
+prefix, so cohort ids are unique), which keeps the fully-fused
+federation round free of host<->device syncs — the cohort array feeds
+straight into the in-jit cohort weight renormalization
+(``kld.cohort_federation_weights_jax``) and the chunk-streamed
+aggregation (``federation.FederationPlan``). Determinism: one key, one
+cohort; the round-to-round key chain lives with the caller (the
+trainer splits its cohort key every ``federate()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# Module-level jitted bodies (cached per static (n, s)): eagerly,
+# jax 0.4's slice/scatter impls dispatch dynamic ops whose index
+# operands are host scalars, which trips
+# transfer_guard("disallow_explicit") in the otherwise transfer-free
+# federation round. Under jit the static bounds compile in.
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def _sample_sorted_prefix(key, n: int, s: int) -> jnp.ndarray:
+    perm = jax.random.permutation(key, n)
+    return jnp.sort(jax.lax.slice(perm, (0,), (s,))).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def _ids_to_mask(ids, n: int) -> jnp.ndarray:
+    return jnp.zeros(n, bool).at[ids].set(True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientRegistry:
+    """The server's view of the registered population.
+
+    ``sizes[k]`` is client k's dataset size (the ``n_k`` of Eq. 15);
+    global client ids are the positions 0..N-1, matching the
+    ``ProfileGroup.client_ids`` convention everywhere else.
+    """
+    sizes: np.ndarray                    # [N] int64 dataset sizes
+
+    def __post_init__(self):
+        object.__setattr__(self, "sizes",
+                           np.asarray(self.sizes, np.int64).reshape(-1))
+
+    @classmethod
+    def from_clients(cls, clients: Sequence) -> "ClientRegistry":
+        """From ``data.partition.ClientSpec``-likes (anything with
+        ``.n``)."""
+        return cls(np.array([c.n for c in clients], np.int64))
+
+    @property
+    def n_clients(self) -> int:
+        return int(self.sizes.shape[0])
+
+    def sample_cohort(self, key, cohort_size: int) -> jnp.ndarray:
+        """Sorted unique client ids ``[cohort_size]`` int32, drawn
+        without replacement from the registry (a ``jax.random``
+        permutation prefix). Jit-compatible; stays on device."""
+        n = self.n_clients
+        s = int(cohort_size)
+        if not 1 <= s <= n:
+            raise ValueError(
+                f"cohort_size {s} out of range for a registry of {n}")
+        return _sample_sorted_prefix(key, n, s)
+
+    def cohort_mask(self, cohort_ids: jnp.ndarray) -> jnp.ndarray:
+        """[N] bool participation mask from sampled ids (device)."""
+        return _ids_to_mask(cohort_ids, self.n_clients)

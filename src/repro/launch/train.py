@@ -44,12 +44,18 @@ def train_huscf_gan(args) -> None:
                                          federate_every=args.federate_every,
                                          seed=args.seed,
                                          use_kernel=args.use_kernel,
-                                         fused_epoch=not args.per_step),
+                                         fused_epoch=not args.per_step,
+                                         cohort_size=args.cohort,
+                                         agg_chunk=args.agg_chunk),
                       fed_mesh=fed_mesh)
+    agg = (f"chunked({args.agg_chunk})" if args.agg_chunk else "dense")
+    part = (f"cohort {args.cohort}/{args.clients}" if args.cohort
+            else "full participation")
     print(f"[train] GA latency model: {tr.ga_latency:.2f}s/iter, "
           f"{len(tr.groups)} profile groups, "
           f"mesh={n_dev if fed_mesh is not None else 1}dev, "
-          f"{'per-step' if args.per_step else 'fused'} epochs")
+          f"{'per-step' if args.per_step else 'fused'} epochs, "
+          f"{agg} aggregation, {part}")
     for ep in range(args.epochs):
         t0 = time.time()
         m = tr.train_epoch()
@@ -126,6 +132,12 @@ def main(argv=None):
     ap.add_argument("--per-step", action="store_true",
                     help="per-step oracle loop instead of scan-fused "
                          "device-resident epochs")
+    ap.add_argument("--cohort", type=int, default=None,
+                    help="sample this many clients per federation round "
+                         "(default: full participation)")
+    ap.add_argument("--agg-chunk", type=int, default=None,
+                    help="stream aggregation in client chunks of this "
+                         "size instead of the dense [K, D] buffer")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
     if args.arch == "huscf-gan":

@@ -67,6 +67,26 @@ def client_axes(mesh, n_rows: int):
     return sanitize(mesh, (n_rows,), (data_axes(mesh),))[0]
 
 
+def group_client_axes(mesh, group_sizes: Sequence[int]):
+    """Mesh axes to shard *per-group* client stacks over, or None.
+
+    The chunk-streamed federation round (core/federation.py,
+    ``chunk_size=``) scans each profile group's ``[K_g, ...]`` leaf
+    stack directly instead of one concatenated ``[K, D]`` buffer, so
+    sharding must split every group's rows evenly — a stricter
+    condition than ``client_axes``'s total-row divisibility (group
+    boundaries may straddle shards in the dense layout, but a shard of
+    a *stacked group leaf* cannot hold a ragged row count). Returns
+    the common sanitize-style spec entry when every group size
+    divides by the data-axes product, else None (callers fall back to
+    the unsharded chunk stream).
+    """
+    specs = {client_axes(mesh, int(s)) for s in group_sizes}
+    if len(specs) == 1:
+        return specs.pop()
+    return None
+
+
 def client_stack_sharding(mesh, shape: Sequence[int]) -> NamedSharding:
     """NamedSharding for a client-stacked ``[K, ...]`` host array: rows
     over the client axes when divisible (``client_axes``), replicated

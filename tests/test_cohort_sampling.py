@@ -1,0 +1,170 @@
+"""ClientRegistry cohort sampling + Eq.-15 cohort weight
+renormalization (core/registry.py, kld.cohort_federation_weights[_jax]).
+
+Regression surface:
+  * renormalized weights sum to 1 within every non-empty
+    (cluster ∩ cohort) and are exactly 0 for non-members — numpy f64
+    and the traced f32 twin agree;
+  * the paper's beta=150 survives in log-space: equal KLDs within a
+    cohort stay size-proportional (the literal n_k exp(-beta KLD)
+    underflows to all-zero there — the PR-4 guard, extended to the
+    cohort mask), and an empty (cluster ∩ cohort) yields zeros, never
+    NaN;
+  * a singleton cohort member in a cluster degenerates to weight 1.0;
+  * sampling is a seeded-PRNG permutation prefix: sorted, unique,
+    in-range, deterministic per key, different across the trainer's
+    key chain — and chaining keys covers the whole registry.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kld as kldm
+from repro.core.registry import ClientRegistry
+
+
+def _case(seed, n=12, n_clusters=3):
+    rng = np.random.default_rng(seed)
+    return (rng.random(n) * 3.0,                        # klds
+            rng.integers(20, 500, n),                   # sizes
+            rng.integers(0, n_clusters, n),             # labels
+            rng.random(n) < 0.5)                        # cohort mask
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("beta", [0.0, 5.0, 150.0])
+def test_cohort_weights_sum_to_one_per_cluster(seed, beta):
+    klds, sizes, labels, mask = _case(seed)
+    w = kldm.cohort_federation_weights(klds, sizes, labels, mask, beta=beta)
+    assert np.all(w[~mask] == 0.0)
+    assert np.all(w >= 0) and np.all(np.isfinite(w))
+    for c in np.unique(labels):
+        members = mask & (labels == c)
+        if members.any():
+            np.testing.assert_allclose(w[members].sum(), 1.0, rtol=1e-12)
+        assert np.all(w[~mask & (labels == c)] == 0.0)
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_cohort_weights_jax_matches_numpy(seed):
+    klds, sizes, labels, mask = _case(seed)
+    n_clusters = int(labels.max()) + 1
+    want = kldm.cohort_federation_weights(klds, sizes, labels, mask, beta=5.0)
+    got = kldm.cohort_federation_weights_jax(
+        jnp.asarray(klds, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(labels, jnp.int32), jnp.asarray(mask), n_clusters,
+        beta=5.0)
+    # f32 twin vs f64 oracle: beta multiplies the KLD rounding into the
+    # logits — same 1e-4 bound the dense device-weight tests use
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+    # and under jit with the mask traced (XLA refuses bit-exactness —
+    # fusion reassociates the exp/normalize — but stays within ulps)
+    jitted = jax.jit(kldm.cohort_federation_weights_jax,
+                     static_argnums=(4, 5))
+    got_j = jitted(jnp.asarray(klds, jnp.float32),
+                   jnp.asarray(sizes, jnp.float32),
+                   jnp.asarray(labels, jnp.int32), jnp.asarray(mask),
+                   n_clusters, 5.0)
+    np.testing.assert_allclose(np.asarray(got_j), np.asarray(got),
+                               atol=1e-6, rtol=0)
+
+
+def test_cohort_weights_no_underflow_at_paper_beta():
+    """Equal KLDs of 8.0 at beta=150: exp(-1200) == 0.0 even in f64 —
+    the log-space cohort softmax must stay size-proportional over the
+    cohort instead of collapsing to uniform (or NaN)."""
+    klds = np.full(6, 8.0)
+    sizes = np.array([100, 300, 500, 100, 200, 400])
+    labels = np.zeros(6, np.int64)
+    mask = np.array([True, True, False, True, False, True])
+    w = kldm.cohort_federation_weights(klds, sizes, labels, mask, beta=150.0)
+    sub = sizes[mask] / sizes[mask].sum()
+    np.testing.assert_allclose(w[mask], sub, rtol=1e-12)
+    assert np.all(w[~mask] == 0.0)
+    got = kldm.cohort_federation_weights_jax(
+        jnp.asarray(klds, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(labels, jnp.int32), jnp.asarray(mask), 1, beta=150.0)
+    # the f32 twin cancels |logits| ~ beta*KLD = 1200 in the seg-max
+    # shift, leaving ~1e-4 relative in the size ratios
+    np.testing.assert_allclose(np.asarray(got)[mask], sub, atol=1e-4)
+    assert np.all(np.asarray(got)[~mask] == 0.0)
+
+
+def test_singleton_and_empty_cohort_clusters():
+    """One cohort member in a cluster -> weight exactly 1.0; a cluster
+    with no cohort members -> all zeros (and no NaN from the guarded
+    -inf seg-max in the traced twin)."""
+    klds = np.array([0.5, 1.0, 2.0, 0.1])
+    sizes = np.array([10, 20, 30, 40])
+    labels = np.array([0, 0, 1, 1])
+    mask = np.array([True, False, False, False])   # cluster 1 empty
+    w = kldm.cohort_federation_weights(klds, sizes, labels, mask, beta=150.0)
+    np.testing.assert_array_equal(w, [1.0, 0.0, 0.0, 0.0])
+    got = np.asarray(kldm.cohort_federation_weights_jax(
+        jnp.asarray(klds, jnp.float32), jnp.asarray(sizes, jnp.float32),
+        jnp.asarray(labels, jnp.int32), jnp.asarray(mask), 2, beta=150.0))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_array_equal(got, [1.0, 0.0, 0.0, 0.0])
+
+
+def test_full_mask_reduces_to_federation_weights():
+    klds, sizes, labels, _ = _case(4)
+    want = kldm.federation_weights(klds, sizes, labels, beta=150.0)
+    got = kldm.cohort_federation_weights(klds, sizes, labels,
+                                         np.ones(len(klds), bool), beta=150.0)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# registry sampling
+# --------------------------------------------------------------------------
+
+def test_sample_cohort_sorted_unique_in_range_deterministic():
+    reg = ClientRegistry(sizes=np.arange(1, 21) * 10)
+    key = jax.random.PRNGKey(0)
+    ids = np.asarray(reg.sample_cohort(key, 7))
+    assert ids.shape == (7,) and ids.dtype == np.int32
+    assert np.array_equal(ids, np.sort(ids))
+    assert len(np.unique(ids)) == 7
+    assert ids.min() >= 0 and ids.max() < 20
+    # same key -> same cohort; next key in a chain -> (generically) not
+    again = np.asarray(reg.sample_cohort(key, 7))
+    np.testing.assert_array_equal(again, ids)
+    other = np.asarray(reg.sample_cohort(jax.random.split(key)[1], 7))
+    assert not np.array_equal(other, ids)
+    # mask round-trips the ids
+    mask = np.asarray(reg.cohort_mask(reg.sample_cohort(key, 7)))
+    assert mask.sum() == 7 and np.all(np.flatnonzero(mask) == ids)
+
+
+def test_sample_cohort_size_bounds():
+    reg = ClientRegistry(sizes=np.full(5, 100))
+    key = jax.random.PRNGKey(0)
+    assert np.asarray(reg.sample_cohort(key, 5)).tolist() == [0, 1, 2, 3, 4]
+    for bad in (0, 6, -1):
+        with pytest.raises(ValueError, match="out of range"):
+            reg.sample_cohort(key, bad)
+
+
+def test_key_chain_covers_registry():
+    """The trainer's split-per-round key chain visits every registered
+    client: over enough rounds each id is sampled at least once (the
+    registry/participation split would be pointless otherwise)."""
+    reg = ClientRegistry(sizes=np.full(16, 50))
+    key = jax.random.PRNGKey(42)
+    seen = np.zeros(16, bool)
+    for _ in range(40):
+        key, sub = jax.random.split(key)
+        seen[np.asarray(reg.sample_cohort(sub, 4))] = True
+    assert seen.all(), f"unsampled clients after 40 rounds: " \
+                       f"{np.flatnonzero(~seen)}"
+
+
+def test_from_clients_reads_dataset_sizes():
+    class Spec:
+        def __init__(self, n):
+            self.n = n
+    reg = ClientRegistry.from_clients([Spec(5), Spec(9), Spec(2)])
+    assert reg.n_clients == 3
+    np.testing.assert_array_equal(reg.sizes, [5, 9, 2])

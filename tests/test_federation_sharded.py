@@ -12,8 +12,10 @@ meshes of 2/4/8 devices out of the forced 8 via
 Matrix: heterogeneous cuts (4 profile groups), >= 3 clusters, client
 counts both divisible (16) and non-divisible (10) by the mesh — the
 latter exercising ``sharding.policy.client_axes``'s sanitize fallback
-to the unsharded path — plus plan-cache keying on mesh identity and
-the ``mesh=None`` default staying byte-identical.
+to the unsharded path — plus plan-cache keying on (mesh identity,
+chunk_size, cohort_size) and the ``mesh=None`` default staying
+byte-identical. The chunk-streamed round's own sharded matrix lives
+in tests/test_federation_chunked.py.
 """
 import numpy as np
 import pytest
@@ -115,9 +117,11 @@ def _check_non_divisible_fallback():
 
 
 def _check_plan_cache_mesh_identity():
-    """Plans are cached per mesh identity: distinct meshes (and None)
-    get distinct plans; an equal mesh (same devices + axis names,
-    rebuilt) reuses the cached one."""
+    """Plans are cached per (mesh identity, chunk_size, cohort_size):
+    distinct meshes (and None) get distinct plans; an equal mesh (same
+    devices + axis names, rebuilt) reuses the cached one; the chunked
+    and cohort variants of the same mesh key separately (their scan /
+    recv-select bake different programs)."""
     import jax
     from repro.core.federation import get_federation_plan
     from repro.launch.mesh import make_federation_mesh
@@ -138,6 +142,18 @@ def _check_plan_cache_mesh_identity():
                               mesh=make_federation_mesh(2))
     assert p2b is p2 and len(cache) == 3
     assert p_none._client_axes is None and p2._client_axes == "data"
+    # (chunk_size, cohort_size) join the key on the same mesh
+    p2c = get_federation_plan(groups, "G", 5, tmpl, plan_cache=cache,
+                              mesh=make_federation_mesh(2), chunk_size=2)
+    p2cs = get_federation_plan(groups, "G", 5, tmpl, plan_cache=cache,
+                               mesh=make_federation_mesh(2), chunk_size=2,
+                               cohort_size=8)
+    assert len(cache) == 5 and p2c is not p2 and p2cs is not p2c
+    assert p2c._chunk_axes == "data"      # 4 per group, divisible by 2
+    assert get_federation_plan(groups, "G", 5, tmpl, plan_cache=cache,
+                               mesh=make_federation_mesh(2),
+                               chunk_size=2, cohort_size=8) is p2cs
+    assert len(cache) == 5
 
 
 def _check_trainer_sharded_rounds():
