@@ -1,0 +1,83 @@
+"""GA cut-search bench: host numpy loop vs fused device-resident search.
+
+Two questions, matching the acceptance bar for the on-device GA:
+
+* full-search throughput — ``optimize_cuts`` at population 1000 on the
+  paper's 100-client population, host oracle vs fused (same seed
+  protocol; solution quality must not regress, wall must drop >= 20x
+  on CPU);
+* per-round re-optimization — the trainer's steady-state cost of
+  ``CutSearcher.run`` on a *staged* searcher (what ``reoptimize_every``
+  pays each federation round), with the one-time build/compile cost
+  reported separately.
+
+``tiny=True`` shrinks population/generations for ci_smoke.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+
+from benchmarks.latency_table import BATCH, paper_population
+from repro.core.genetic import CutSearcher, GAConfig, optimize_cuts
+
+
+def _wall(fn, repeats: int = 1) -> float:
+    """Median wall seconds over ``repeats`` calls."""
+    times: List[float] = []
+    for _ in range(repeats):
+        t0 = time.time()
+        fn()
+        times.append(time.time() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def run(report, tiny: bool = False):
+    n_clients = 20 if tiny else 100
+    devices = paper_population(n_clients)
+    pop = 64 if tiny else 1000
+    gens = 10 if tiny else 60
+    cfg = GAConfig(population_size=pop, generations=gens, seed=0)
+
+    # --- full search: host oracle ------------------------------------
+    t0 = time.time()
+    host = optimize_cuts(devices, batch=BATCH, config=cfg, fused=False)
+    host_wall = time.time() - t0
+    report(f"ga/host_pop{pop}", host_wall * 1e6,
+           f"latency={host.latency:.4f}s gens={host.generations_run}")
+
+    # --- full search: fused (compile separated from steady state) ----
+    searcher = CutSearcher(devices, batch=BATCH, config=cfg)
+    key = jax.random.PRNGKey(cfg.seed)
+    t0 = time.time()
+    jax.block_until_ready(searcher.run(key))          # trace + compile
+    compile_wall = time.time() - t0
+    report(f"ga/fused_compile_pop{pop}", compile_wall * 1e6,
+           "one-time trace+compile (shared across same-shape populations)")
+
+    fused_wall = _wall(lambda: jax.block_until_ready(searcher.run(key)),
+                       repeats=3 if tiny else 5)
+    fused = searcher.to_result(searcher.run(key))
+    speedup = host_wall / fused_wall
+    report(f"ga/fused_pop{pop}", fused_wall * 1e6,
+           f"latency={fused.latency:.4f}s gens={fused.generations_run} "
+           f"speedup={speedup:.1f}x "
+           f"quality_ok={fused.latency <= host.latency + 1e-9}")
+
+    # --- per-round re-optimization (trainer steady state) ------------
+    # fresh keys per round, like the trainer's _ga_key chain; run() is
+    # the transfer-free dispatch, to_result() adds the readback +
+    # host-f64 re-evaluation the trainer does only on adoption
+    keys = jax.random.split(key, 8)
+    reopt_wall = _wall(
+        lambda: jax.block_until_ready(searcher.run(keys[0])),
+        repeats=3 if tiny else 5)
+    report("ga/reopt_dispatch", reopt_wall * 1e6,
+           "per-round search dispatch (device arrays only)")
+    full_wall = _wall(lambda: searcher.to_result(searcher.run(keys[1])),
+                      repeats=3 if tiny else 5)
+    report("ga/reopt_round", full_wall * 1e6,
+           "dispatch + readback + host-f64 re-eval (cut adoption)")

@@ -1,13 +1,22 @@
 """Paper Tables 15/16 (latency + per-device cut assignments) and the GA
-ablations (Tables 24 and 27). Fully analytic -> exactly reproducible."""
+ablations (Tables 24 and 27). Fully analytic -> exactly reproducible.
+
+The base GA solve (paper population, PS=300/GEN=40/seed 0) is computed
+once and shared: Table 15 reports its latency, Table 16 reads the
+per-profile cut assignment straight out of the same solution (the paper
+derives both tables from one optimization), and any ablation setting
+that coincides with an already-solved (devices, config) hits the same
+cache. ``tiny=True`` shrinks populations/generations for ci_smoke.
+"""
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core.genetic import GAConfig, optimize_cuts
+from repro.core.genetic import GAConfig, GAResult, optimize_cuts
 from repro.core.latency import (PAPER_DEVICES, PAPER_SERVER, Cut,
                                 fedgan_iteration_latency,
                                 fedsplitgan_iteration_latency,
@@ -18,21 +27,36 @@ from repro.core.latency import (PAPER_DEVICES, PAPER_SERVER, Cut,
 
 BATCH = 64
 
+# one GA solve per distinct (devices, config); DeviceProfile is a frozen
+# dataclass, so the device tuple hashes by value
+_GA_CACHE: Dict[Tuple, Tuple[GAResult, float]] = {}
+
+
+def shared_ga(devices, config: GAConfig) -> Tuple[GAResult, float]:
+    """(result, wall_s) for a GA solve, memoized on (devices, config)."""
+    key = (tuple(devices), dataclasses.astuple(config))
+    if key not in _GA_CACHE:
+        t0 = time.time()
+        result = optimize_cuts(list(devices), batch=BATCH, config=config)
+        _GA_CACHE[key] = (result, time.time() - t0)
+    return _GA_CACHE[key]
+
+
+def base_config(tiny: bool = False) -> GAConfig:
+    return GAConfig(population_size=60 if tiny else 300,
+                    generations=10 if tiny else 40, seed=0)
+
 
 def paper_population(n: int = 100, seed: int = 0):
     rng = np.random.default_rng(seed)
     return [PAPER_DEVICES[i] for i in rng.integers(0, 7, n)]
 
 
-def table15(n_clients: int = 100) -> List[Dict]:
+def table15(n_clients: int = 100, tiny: bool = False) -> List[Dict]:
     """Latency comparison across approaches (paper: 7.8 / 251 / 234 /
     454 / 47.7 / 8.68 s)."""
     devices = paper_population(n_clients)
-    t0 = time.time()
-    ga = optimize_cuts(devices, batch=BATCH,
-                       config=GAConfig(population_size=300, generations=40,
-                                       seed=0))
-    ga_wall = time.time() - t0
+    ga, ga_wall = shared_ga(devices, base_config(tiny))
     rows = [
         {"approach": "HuSCF-GAN", "latency_s": ga.latency, "paper_s": 7.8},
         {"approach": "PFL-GAN",
@@ -58,19 +82,24 @@ def table15(n_clients: int = 100) -> List[Dict]:
     return rows
 
 
-def table16_cuts() -> List[Dict]:
-    """Per-device-profile optimal cut assignment (paper Table 16)."""
-    devices = list(PAPER_DEVICES)  # one client per profile
-    ga = optimize_cuts(devices, batch=BATCH,
-                       config=GAConfig(population_size=300, generations=40,
-                                       seed=0))
+def table16_cuts(n_clients: int = 100, tiny: bool = False) -> List[Dict]:
+    """Per-device-profile optimal cut assignment (paper Table 16), read
+    off the *shared* Table-15 solve: under profile reduction every
+    client of a profile carries the same cut, so the assignment is the
+    population solution restricted to one client per profile."""
+    devices = paper_population(n_clients)
+    ga, _ = shared_ga(devices, base_config(tiny))
+    cut_of: Dict[str, Cut] = {}
+    for d, c in zip(devices, ga.cuts):
+        cut_of.setdefault(d.name, c)
     return [{"device": d.name, "g_head_layers": c.g_h,
              "g_tail_layers": 5 - c.g_t, "d_head_layers": c.d_h,
              "d_tail_layers": 5 - c.d_t}
-            for d, c in zip(devices, ga.cuts)]
+            for d in PAPER_DEVICES
+            for c in (cut_of.get(d.name),) if c is not None]
 
 
-def table24_ga_hyperparams() -> List[Dict]:
+def table24_ga_hyperparams(tiny: bool = False) -> List[Dict]:
     """GA hyperparameter ablation (paper Table 24)."""
     devices = paper_population(100)
     rows = []
@@ -81,43 +110,46 @@ def table24_ga_hyperparams() -> List[Dict]:
         ("PS=300 CR=0.7 MR=0.1", 300, 0.7, 0.1),
         ("PS=50  CR=0.7 MR=0.01", 50, 0.7, 0.01),
     ]
+    if tiny:
+        settings = settings[:2]
+    gens = 8 if tiny else 25
     for name, ps, cr, mr in settings:
-        ga = optimize_cuts(devices, batch=BATCH,
-                           config=GAConfig(population_size=ps, generations=25,
-                                           crossover_rate=cr,
-                                           mutation_rate=mr, seed=0))
+        ga, _ = shared_ga(devices,
+                          GAConfig(population_size=20 if tiny else ps,
+                                   generations=gens, crossover_rate=cr,
+                                   mutation_rate=mr, seed=0))
         rows.append({"setting": name, "latency_s": ga.latency})
     return rows
 
 
-def table27_profile_vs_client() -> List[Dict]:
+def table27_profile_vs_client(tiny: bool = False) -> List[Dict]:
     """Profile-based vs client-based GA (paper Table 27: 7.8s/12gen vs
     8.26s/488gen with 100 devices)."""
-    devices = paper_population(100)
+    devices = paper_population(20 if tiny else 100)
     out = []
     for profile_based in (True, False):
-        ga = optimize_cuts(devices, batch=BATCH,
-                           config=GAConfig(population_size=200,
-                                           generations=40,
-                                           profile_based=profile_based,
-                                           seed=0))
+        ga, _ = shared_ga(devices,
+                          GAConfig(population_size=40 if tiny else 200,
+                                   generations=8 if tiny else 40,
+                                   profile_based=profile_based, seed=0))
         out.append({"strategy": "profile" if profile_based else "client",
                     "latency_s": ga.latency,
                     "convergence_gen": ga.convergence_gen})
     return out
 
 
-def run(report):
-    for row in table15():
+def run(report, tiny: bool = False):
+    n = 20 if tiny else 100
+    for row in table15(n, tiny):
         report(f"table15/{row['approach']}", row["latency_s"],
                f"paper={row['paper_s']} ratio={row['ratio_vs_huscf']:.1f}x")
-    for row in table16_cuts():
+    for row in table16_cuts(n, tiny):
         report(f"table16/{row['device']}", row["g_head_layers"],
                f"gt={row['g_tail_layers']} dh={row['d_head_layers']} "
                f"dt={row['d_tail_layers']}")
-    for row in table24_ga_hyperparams():
+    for row in table24_ga_hyperparams(tiny):
         report(f"table24/{row['setting'].replace(' ', '')}",
                row["latency_s"], "")
-    for row in table27_profile_vs_client():
+    for row in table27_profile_vs_client(tiny):
         report(f"table27/{row['strategy']}", row["latency_s"],
                f"convergence_gen={row['convergence_gen']}")

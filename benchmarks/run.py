@@ -4,7 +4,11 @@ Prints ``name,us_per_call,derived`` CSV rows (plus section markers).
 ``python -m benchmarks.run [--full] [--only SECTION] [--json PATH]``
 
 Sections:
-  latency    — paper Tables 15/16/24/27 (analytic, exact reproduction)
+  latency    — paper Tables 15/16/24/27 (analytic, exact reproduction;
+               ``--latency-tiny`` shrinks GA populations for CI)
+  ga         — GA cut search: host numpy loop vs fused device-resident
+               search at population 1000, plus the per-round
+               re-optimization microbench (``--ga-tiny`` for CI)
   kernels    — Pallas kernel micro-benches
   federation — fused vs legacy Eq.-16 federation round (32 clients)
                plus the chunk-streamed population-scale round at 1k/8k
@@ -44,6 +48,12 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="run a single section")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a BENCH_*.json dict")
+    ap.add_argument("--latency-tiny", action="store_true",
+                    help="latency tables with shrunken GA populations "
+                         "(CI smoke)")
+    ap.add_argument("--ga-tiny", action="store_true",
+                    help="ga section at population 64 x 20 clients "
+                         "(CI smoke)")
     ap.add_argument("--train-tiny", action="store_true",
                     help="train section at 2 clients x 2 steps (CI smoke)")
     ap.add_argument("--cluster-tiny", action="store_true",
@@ -60,8 +70,8 @@ def main() -> None:
                      "derived": derived})
         print(f"{name},{value:.3f},{derived}", flush=True)
 
-    sections = ["latency", "kernels", "federation", "cluster", "train",
-                "quality", "kld", "ablation", "roofline"]
+    sections = ["latency", "ga", "kernels", "federation", "cluster",
+                "train", "quality", "kld", "ablation", "roofline"]
     if args.only:
         sections = [args.only]
 
@@ -69,7 +79,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     if "latency" in sections:
         from benchmarks import latency_table
-        latency_table.run(_report)
+        latency_table.run(_report, tiny=args.latency_tiny)
+    if "ga" in sections:
+        from benchmarks import ga_bench
+        ga_bench.run(_report, tiny=args.ga_tiny)
     if "kernels" in sections:
         from benchmarks import kernel_bench
         kernel_bench.run(_report)

@@ -50,4 +50,15 @@ python -m benchmarks.run --only cluster --cluster-tiny \
 python -m benchmarks.run --only federation --fed-tiny \
     --json results/bench_federation.json
 
+# On-device GA cut search, tiny config (population 64 x 20 clients):
+# host oracle vs fused search plus the per-round re-optimization
+# microbench, appended to its own perf trajectory.
+python -m benchmarks.run --only ga --ga-tiny \
+    --json results/bench_ga.json
+
+# Analytic latency tables with shrunken GA populations: keeps the
+# shared-solve (Tables 15/16 from one optimization) path exercised.
+python -m benchmarks.run --only latency --latency-tiny \
+    --json results/bench_latency.json
+
 echo "ci_smoke: OK"

@@ -33,10 +33,11 @@ from repro.core.clustering import (cluster_activations,
 from repro.core.federation import (donate_default, federate_client_params,
                                    federate_client_params_device,
                                    fedavg_uniform)
-from repro.core.genetic import GAConfig, optimize_cuts
+from repro.core.genetic import CutSearcher, GAConfig, optimize_cuts
 from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
 from repro.core.registry import ClientRegistry
-from repro.core.splitting import (ProfileGroup, group_by_profile, layer_pair,
+from repro.core.splitting import (ProfileGroup, client_owned_layers,
+                                  group_by_profile, layer_pair,
                                   server_union_span)
 from repro.data.partition import ClientSpec
 from repro.data.pipeline import sample_batch, stage_clients
@@ -91,6 +92,13 @@ class HuSCFConfig:
     # size instead of materializing the dense [K, D] buffer
     # (federation.FederationPlan.aggregate_chunked, O(chunk + clusters)
     # memory). None = dense fused round.
+    reoptimize_every: Optional[int] = None
+    # re-run the (fused, device-resident) GA cut search every this many
+    # federation rounds against the *current* device profiles; when it
+    # finds strictly better cuts the trainer regroups online (profile
+    # groups, migrated client/server params, re-staged dataset) and
+    # invalidates the FederationPlan cache. 1 = every round (cheap: one
+    # cached-program dispatch per search). None = static cuts (paper).
 
 
 # ---------------------------------------------------------------------------
@@ -266,11 +274,12 @@ class HuSCFTrainer:
         self.server_profile = server
 
         # Stage 1: GA cut selection
+        self._ga_config = ga_config or GAConfig(population_size=200,
+                                                generations=30,
+                                                seed=config.seed)
         if cuts is None:
-            ga_config = ga_config or GAConfig(population_size=200,
-                                              generations=30, seed=config.seed)
             result = optimize_cuts(self.devices, server, batch=config.batch,
-                                   config=ga_config)
+                                   config=self._ga_config)
             cuts = result.cuts
             self.ga_latency = result.latency
         else:
@@ -306,17 +315,20 @@ class HuSCFTrainer:
             raise ValueError(f"cohort_size {config.cohort_size} out of "
                              f"range for {K} registered clients")
         self._cohort_key = jax.random.PRNGKey(config.seed + 3)
+        # on-device GA cut re-optimization: its own key chain + a
+        # cache of staged searchers (rebuilt only when the device
+        # population itself changes)
+        self._ga_key = jax.random.PRNGKey(config.seed + 4)
+        self._searchers: Dict = {}
         if fed_mesh is not None and fed_mesh.devices.size > 1:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            rep = NamedSharding(fed_mesh, P())
-            put = functools.partial(jax.device_put, device=rep)
-            self.state = jax.tree_util.tree_map(put, self.state)
-            self._train_key = put(self._train_key)
-            self._mid_ema = put(self._mid_ema)
-            self._ema_init = put(self._ema_init)
-            self._sizes_dev = put(self._sizes_dev)
-            self._cluster_key = put(self._cluster_key)
-            self._cohort_key = put(self._cohort_key)
+            self.state = jax.tree_util.tree_map(self._put_replicated,
+                                                self.state)
+            self._train_key = self._put_replicated(self._train_key)
+            self._mid_ema = self._put_replicated(self._mid_ema)
+            self._ema_init = self._put_replicated(self._ema_init)
+            self._sizes_dev = self._put_replicated(self._sizes_dev)
+            self._cluster_key = self._put_replicated(self._cluster_key)
+            self._cohort_key = self._put_replicated(self._cohort_key)
         # fused-federation plans (treedefs/leaf shapes/layer offsets),
         # built on first round and reused so repeat rounds pay zero
         # host-side tree walking.
@@ -362,11 +374,24 @@ class HuSCFTrainer:
 
         g_params = {"client": client_g, "server": server_g}
         d_params = {"client": client_d, "server": server_d}
-        opt_init_g, self._opt_update_g = adam(self.cfg.lr, b1=self.cfg.adam_b1)
-        opt_init_d, self._opt_update_d = adam(self.cfg.lr, b1=self.cfg.adam_b1)
+        # init fns kept: an online re-cut rebuilds the Adam moments for
+        # the migrated param structure (the param->slot mapping changed)
+        self._opt_init_g, self._opt_update_g = adam(self.cfg.lr,
+                                                    b1=self.cfg.adam_b1)
+        self._opt_init_d, self._opt_update_d = adam(self.cfg.lr,
+                                                    b1=self.cfg.adam_b1)
         return {"G": g_params, "D": d_params,
-                "opt_g": opt_init_g(g_params), "opt_d": opt_init_d(d_params),
+                "opt_g": self._opt_init_g(g_params),
+                "opt_d": self._opt_init_d(d_params),
                 "step": jnp.zeros((), jnp.int32)}
+
+    def _put_replicated(self, x):
+        """Replicate a device value onto the federation mesh (identity
+        without one)."""
+        if self.fed_mesh is None or self.fed_mesh.devices.size <= 1:
+            return x
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(x, NamedSharding(self.fed_mesh, P()))
 
     # -- one training step (pure body, shared by both epoch paths) ---------
     def _build_step_core(self) -> Callable:
@@ -560,6 +585,13 @@ class HuSCFTrainer:
         chunks instead of the dense [K, D] buffer."""
         mesh = self.fed_mesh if mesh is self._MESH_DEFAULT else mesh
         self.fed_round += 1
+        recut = None
+        if (self.cfg.reoptimize_every is not None
+                and self.fed_round % self.cfg.reoptimize_every == 0):
+            # online cut re-optimization: one cached-program GA
+            # dispatch against the current profiles; regroups (and
+            # invalidates the plan cache) only on strictly better cuts
+            recut = self.reoptimize_cuts()
         cohort_ids = cohort_mask = None
         if self.cfg.cohort_size is not None:
             self._cohort_key, sub = jax.random.split(self._cohort_key)
@@ -589,10 +621,15 @@ class HuSCFTrainer:
             diag = {"round": self.fed_round, "mode": "fedavg"}
             if cohort_ids is not None:
                 diag["cohort"] = cohort_ids
+            if recut is not None:
+                diag["recut"] = recut
             return diag
 
         if self.cfg.fused_cluster and not use_label_kld:
-            return self._federate_fused(mesh, cohort_ids, cohort_mask)
+            diag = self._federate_fused(mesh, cohort_ids, cohort_mask)
+            if recut is not None:
+                diag["recut"] = recut
+            return diag
 
         acts = self.middle_activations()
         cl = cluster_activations(acts, k=self.cfg.num_clusters,
@@ -629,6 +666,8 @@ class HuSCFTrainer:
                 "labels": cl.labels, "weights": weights, "klds": klds}
         if cohort_ids is not None:
             diag["cohort"] = cohort_ids
+        if recut is not None:
+            diag["recut"] = recut
         return diag
 
     # -- device-resident stage 3+4 (fused_cluster) -------------------------
@@ -705,6 +744,238 @@ class HuSCFTrainer:
         if cohort_ids is not None:
             diag["cohort"] = cohort_ids
         return diag
+
+    # -- online cut re-optimization + population churn ---------------------
+    def _get_searcher(self, devices: Optional[Sequence[DeviceProfile]] = None
+                      ) -> CutSearcher:
+        """Staged fused-GA searcher for a device population (default:
+        the current one). Cached so repeat re-optimizations against an
+        unchanged population cost one dispatch, not a rebuild; the
+        jitted program itself is shared across searchers with the same
+        GA shape (genetic._get_search_fn's lru_cache)."""
+        devices = self.devices if devices is None else list(devices)
+        key = (tuple(devices), self.server_profile, self.cfg.batch,
+               dataclasses.astuple(self._ga_config))
+        s = self._searchers.get(key)
+        if s is None:
+            s = self._searchers[key] = CutSearcher(
+                devices, self.server_profile, batch=self.cfg.batch,
+                config=self._ga_config)
+        return s
+
+    def _run_search(self, searcher: CutSearcher):
+        """One GA dispatch off the trainer's GA key chain. The guard
+        *enforces* that the per-round search is transfer-free (key
+        split, staged tables, in-graph generations — device arrays
+        only); readbacks happen in to_result, outside, and only when a
+        result is adopted or compared."""
+        self._ga_key, sub = jax.random.split(self._ga_key)
+        with jax.transfer_guard("disallow_explicit"):
+            return searcher.run(sub)
+
+    def reoptimize_cuts(self) -> bool:
+        """Re-run the (fused, device-resident) GA against the current
+        device population; when it finds strictly better cuts than the
+        live assignment, regroup online (migrated params, re-staged
+        dataset, invalidated FederationPlan cache). Returns whether the
+        cuts changed. GA ties / losses against the incumbent must NOT
+        churn the population, so a no-better search is a no-op."""
+        searcher = self._get_searcher()
+        result = searcher.to_result(self._run_search(searcher))
+        current = huscf_iteration_latency(self.cuts, self.devices,
+                                          self.server_profile,
+                                          self.cfg.batch)
+        if result.latency >= current * (1 - 1e-9):
+            return False
+        self.ga_latency = result.latency
+        self._rebuild_population(self.clients, self.devices, result.cuts,
+                                 old_of=list(range(len(self.clients))))
+        return True
+
+    def apply_churn(self, leave: Sequence[int] = (),
+                    join: Sequence[Tuple[ClientSpec, DeviceProfile]] = ()
+                    ) -> List[Cut]:
+        """Registry churn: ``leave`` = global client ids exiting,
+        ``join`` = (ClientSpec, DeviceProfile) pairs entering.
+        Membership changed, so cuts are re-derived unconditionally
+        (unlike ``reoptimize_cuts``'s better-only policy) and the
+        population rebuilds: survivors keep their trained params/EMA
+        rows under their new global ids, joiners start from the
+        server's copies (population mean where the server has none).
+        Returns the new per-client cut list."""
+        join = list(join)
+        _, old_of = self.registry.churn(leave,
+                                        [spec.n for spec, _ in join])
+        joiners = iter(join)
+        new_clients, new_devices = [], []
+        for o in old_of:
+            if o >= 0:
+                new_clients.append(self.clients[o])
+                new_devices.append(self.devices[o])
+            else:
+                spec, dev = next(joiners)
+                new_clients.append(spec)
+                new_devices.append(dev)
+        searcher = self._get_searcher(new_devices)
+        result = searcher.to_result(self._run_search(searcher))
+        self.ga_latency = result.latency
+        self._rebuild_population(new_clients, new_devices, result.cuts,
+                                 old_of)
+        return list(self.cuts)
+
+    def update_profile(self, cid: int, profile: DeviceProfile) -> List[Cut]:
+        """A registered client reports new capabilities (measured
+        bandwidth / frequency drift). Re-derives cuts for the updated
+        population and regroups — identity-preserving churn, so the
+        client keeps its dataset, params and EMA row."""
+        if not 0 <= cid < len(self.clients):
+            raise ValueError(f"unknown client id {cid}")
+        new_devices = list(self.devices)
+        new_devices[cid] = profile
+        searcher = self._get_searcher(new_devices)
+        result = searcher.to_result(self._run_search(searcher))
+        self.ga_latency = result.latency
+        self._rebuild_population(self.clients, new_devices, result.cuts,
+                                 old_of=list(range(len(self.clients))))
+        return list(self.cuts)
+
+    def _migrate_client_params(self, net: str,
+                               new_groups: Sequence[ProfileGroup],
+                               old_of: Sequence[int]) -> Dict[str, Any]:
+        """Client-side param migration for a re-cut/churn rebuild.
+        ``old_of[new_cid]`` is the old global client id (-1 = joiner).
+
+        Policy: a layer the client already owned keeps its trained
+        copy; a layer it newly owns takes the server's trained copy
+        (the server held it — that client delegated it until now);
+        joiners take server copies too, falling back to the old
+        population mean for layers the old server never held (such a
+        layer was owned by *every* old client, so the mean exists)."""
+        defs = GEN_LAYER_DEFS if net == "G" else DISC_LAYER_DEFS
+        n = len(defs)
+        old_server = self.state[net]["server"]
+        old_client = self.state[net]["client"]
+        old_owned = {g.name: set(client_owned_layers(layer_pair(g.cut, net),
+                                                     n))
+                     for g in self.groups}
+        old_loc = {}
+        for g in self.groups:
+            for pos, cid in enumerate(g.client_ids):
+                old_loc[cid] = (g.name, pos)
+        mean_cache: Dict[int, Any] = {}
+
+        def pop_mean(l: int):
+            if l not in mean_cache:
+                stacks = [old_client[g.name][str(l)] for g in self.groups
+                          if l in old_owned[g.name]]
+                mean_cache[l] = jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs, 0).mean(0), *stacks)
+            return mean_cache[l]
+
+        def one_client(old_cid: int, l: int):
+            if old_cid >= 0:
+                gname, pos = old_loc[old_cid]
+                if l in old_owned[gname]:
+                    return jax.tree_util.tree_map(
+                        lambda x: x[pos], old_client[gname][str(l)])
+            if str(l) in old_server:
+                return old_server[str(l)]
+            return pop_mean(l)
+
+        out = {}
+        for g in new_groups:
+            owned = client_owned_layers(layer_pair(g.cut, net), n)
+            out[g.name] = {
+                str(l): jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs, 0),
+                    *[one_client(old_of[cid], l) for cid in g.client_ids])
+                for l in owned}
+        return out
+
+    def _migrate_server_params(self, net: str,
+                               new_groups: Sequence[ProfileGroup]
+                               ) -> Dict[str, Any]:
+        """Server span under the new cuts: layers the server already
+        held keep their trained copies; a layer newly delegated to the
+        server was owned by every old client that hosted it, so it
+        starts from the mean of those trained client copies."""
+        defs = GEN_LAYER_DEFS if net == "G" else DISC_LAYER_DEFS
+        n = len(defs)
+        old_server = self.state[net]["server"]
+        old_client = self.state[net]["client"]
+        new_server = {}
+        for l in server_union_span(new_groups, net, n):
+            if str(l) in old_server:
+                new_server[str(l)] = old_server[str(l)]
+                continue
+            stacks = [old_client[g.name][str(l)] for g in self.groups
+                      if l in set(client_owned_layers(
+                          layer_pair(g.cut, net), n))]
+            new_server[str(l)] = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, 0).mean(0), *stacks)
+        return new_server
+
+    def _rebuild_population(self, new_clients: Sequence[ClientSpec],
+                            new_devices: Sequence[DeviceProfile],
+                            new_cuts: Sequence[Cut],
+                            old_of: Sequence[int]) -> None:
+        """Swap in a new (clients, devices, cuts) population online:
+        migrate params + optimizer + EMA, re-stage the dataset, rebuild
+        the traced programs, and invalidate the FederationPlan cache
+        (its keys embed the old group cuts/client ids)."""
+        new_groups = group_by_profile(new_devices, new_cuts)
+        K_new = len(new_clients)
+        new_state: Dict[str, Any] = {}
+        for net in ("G", "D"):
+            new_state[net] = {
+                "client": self._migrate_client_params(net, new_groups,
+                                                      old_of),
+                "server": self._migrate_server_params(net, new_groups)}
+        # Adam moments restart for the migrated structure; the step
+        # counter survives so schedules/beta-corrections don't rewind
+        new_state["opt_g"] = self._opt_init_g(new_state["G"])
+        new_state["opt_d"] = self._opt_init_d(new_state["D"])
+        new_state["step"] = self.state["step"]
+        # middle-activation EMA is global-client-indexed, so survivors
+        # keep their rows under the new ids; joiners start from the
+        # survivor mean (neutral for stage-3 clustering until their own
+        # activations arrive)
+        old_ema = np.asarray(self._mid_ema)
+        new_ema = np.zeros((K_new, old_ema.shape[1]), np.float32)
+        surv = [(i, o) for i, o in enumerate(old_of) if o >= 0]
+        for i, o in surv:
+            new_ema[i] = old_ema[o]
+        if self._trained and surv and len(surv) < K_new:
+            fill = old_ema[[o for _, o in surv]].mean(0)
+            for i, o in enumerate(old_of):
+                if o < 0:
+                    new_ema[i] = fill
+        self._mid_acc = {i: self._mid_acc[o] for i, o in enumerate(old_of)
+                         if o >= 0 and o in self._mid_acc}
+
+        self.clients = list(new_clients)
+        self.devices = list(new_devices)
+        self.cuts = list(new_cuts)
+        self.groups = new_groups
+        self.sizes = np.array([c.n for c in self.clients], np.int64)
+        self.registry = ClientRegistry.from_clients(self.clients)
+        if self.cfg.cohort_size is not None and not (
+                1 <= self.cfg.cohort_size <= K_new):
+            raise ValueError(
+                f"cohort_size {self.cfg.cohort_size} out of range for "
+                f"{K_new} registered clients after churn")
+        self._dataset = stage_clients(self.groups, self.clients,
+                                      mesh=self.fed_mesh)
+        self.state = jax.tree_util.tree_map(self._put_replicated, new_state)
+        self._mid_ema = self._put_replicated(jnp.asarray(new_ema))
+        self._sizes_dev = self._put_replicated(
+            jnp.asarray(self.sizes, jnp.float32))
+        # every traced artifact keyed on the old grouping is stale
+        self._fed_plans.clear()
+        self._epoch_fns.clear()
+        self._gen_fn = None
+        self._step_core = self._build_step_core()
+        self._step_fn = self._build_step()
 
     # -- generation for evaluation ------------------------------------------
     def generate(self, n_per_client_batch: int, labels: np.ndarray

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -83,3 +83,25 @@ class ClientRegistry:
     def cohort_mask(self, cohort_ids: jnp.ndarray) -> jnp.ndarray:
         """[N] bool participation mask from sampled ids (device)."""
         return _ids_to_mask(cohort_ids, self.n_clients)
+
+    def churn(self, leave: Sequence[int] = (),
+              join_sizes: Sequence[int] = ()
+              ) -> Tuple["ClientRegistry", List[int]]:
+        """Membership churn: ``leave`` = registered ids exiting,
+        ``join_sizes`` = dataset sizes of new registrants. Returns the
+        post-churn registry plus the id remap ``old_of`` (new global id
+        -> old id, -1 for joiners): survivors compact down in
+        registration order, joiners append — the convention the trainer
+        uses to migrate params/EMA rows across a rebuild."""
+        leave_set = {int(c) for c in leave}
+        bad = sorted(c for c in leave_set if not 0 <= c < self.n_clients)
+        if bad:
+            raise ValueError(f"unknown client ids in leave: {bad}")
+        old_of = [c for c in range(self.n_clients) if c not in leave_set]
+        sizes = [int(self.sizes[o]) for o in old_of]
+        for s in join_sizes:
+            old_of.append(-1)
+            sizes.append(int(s))
+        if not sizes:
+            raise ValueError("churn would leave an empty registry")
+        return ClientRegistry(np.array(sizes, np.int64)), old_of

@@ -46,16 +46,19 @@ def train_huscf_gan(args) -> None:
                                          use_kernel=args.use_kernel,
                                          fused_epoch=not args.per_step,
                                          cohort_size=args.cohort,
-                                         agg_chunk=args.agg_chunk),
+                                         agg_chunk=args.agg_chunk,
+                                         reoptimize_every=args.reoptimize_every),
                       fed_mesh=fed_mesh)
     agg = (f"chunked({args.agg_chunk})" if args.agg_chunk else "dense")
     part = (f"cohort {args.cohort}/{args.clients}" if args.cohort
             else "full participation")
+    reopt = (f", re-cut every {args.reoptimize_every} rounds"
+             if args.reoptimize_every else "")
     print(f"[train] GA latency model: {tr.ga_latency:.2f}s/iter, "
           f"{len(tr.groups)} profile groups, "
           f"mesh={n_dev if fed_mesh is not None else 1}dev, "
           f"{'per-step' if args.per_step else 'fused'} epochs, "
-          f"{agg} aggregation, {part}")
+          f"{agg} aggregation, {part}{reopt}")
     for ep in range(args.epochs):
         t0 = time.time()
         m = tr.train_epoch()
@@ -138,6 +141,11 @@ def main(argv=None):
     ap.add_argument("--agg-chunk", type=int, default=None,
                     help="stream aggregation in client chunks of this "
                          "size instead of the dense [K, D] buffer")
+    ap.add_argument("--reoptimize-every", type=int, default=None,
+                    help="re-run the fused GA cut search every N "
+                         "federation rounds; strictly better cuts "
+                         "regroup the population online (default: "
+                         "static cuts)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)
     if args.arch == "huscf-gan":

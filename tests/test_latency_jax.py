@@ -1,0 +1,126 @@
+"""The vectorized Eq. 3-10 latency model (core/latency_jax) against the
+host reference, plus baseline-model sanity checks.
+
+The fused GA's fitness is only as good as this equivalence: tables are
+f64-exact values rounded once to f32, so the device result must track
+the host f64 model to 1e-6 relative over the *whole* cut-option space
+for every device-mix width the trainer produces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.latency import (Cut, PAPER_DEVICES, PAPER_SERVER,
+                                all_cut_options, fedgan_iteration_latency,
+                                fedsplitgan_iteration_latency,
+                                hflgan_iteration_latency,
+                                huscf_iteration_latency,
+                                mdgan_iteration_latency,
+                                pflgan_iteration_latency)
+from repro.core.latency_jax import (build_latency_tables,
+                                    huscf_iteration_latency_jax,
+                                    population_latency)
+
+OPTIONS = all_cut_options()
+REL_TOL = 1e-6
+
+
+def _mix(n_clients: int):
+    return [PAPER_DEVICES[i % len(PAPER_DEVICES)] for i in range(n_clients)]
+
+
+def _rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(b), 1e-12)
+
+
+@pytest.mark.parametrize("n_clients", [1, 3, 7])
+def test_matches_host_over_all_options(n_clients):
+    """Seeded sweep: every same-option assignment plus 50 random
+    per-client combinations per mix, all within 1e-6 relative."""
+    devices = _mix(n_clients)
+    tables = build_latency_tables(devices, PAPER_SERVER, batch=64)
+    rng = np.random.default_rng(1234 + n_clients)
+    assignments = [np.full(n_clients, o, np.int32)
+                   for o in range(len(OPTIONS))]
+    assignments += [rng.integers(0, len(OPTIONS), n_clients).astype(np.int32)
+                    for _ in range(50)]
+    worst = 0.0
+    for idx in assignments:
+        cuts = [OPTIONS[o] for o in idx]
+        host = huscf_iteration_latency(cuts, devices, PAPER_SERVER, 64)
+        dev = float(huscf_iteration_latency_jax(tables, jnp.asarray(idx)))
+        worst = max(worst, _rel_err(dev, host))
+    assert worst < REL_TOL, f"worst rel err {worst:.3e} over {REL_TOL:.0e}"
+
+
+def test_population_eval_matches_per_individual():
+    devices = _mix(5)
+    tables = build_latency_tables(devices, PAPER_SERVER, batch=64)
+    rng = np.random.default_rng(7)
+    pop = jnp.asarray(rng.integers(0, len(OPTIONS), (32, 5)), jnp.int32)
+    lat_pop = np.asarray(population_latency(tables, pop))
+    for p in range(pop.shape[0]):
+        one = float(huscf_iteration_latency_jax(tables, pop[p]))
+        assert abs(lat_pop[p] - one) <= 1e-6 * abs(one)
+
+
+def test_profile_counts_collapse_is_exact():
+    """Appendix D taken into the fitness: evaluating the 7 unique
+    profiles with a client-count vector must equal evaluating all
+    clients expanded (max is idempotent over identical clients; only
+    n_active needs multiplicity)."""
+    counts_np = np.array([5, 1, 3, 2, 8, 1, 4], np.int64)
+    reps = list(PAPER_DEVICES)
+    expanded = [d for d, c in zip(reps, counts_np) for _ in range(c)]
+    t_reps = build_latency_tables(reps, PAPER_SERVER, batch=64)
+    t_full = build_latency_tables(expanded, PAPER_SERVER, batch=64)
+    rng = np.random.default_rng(11)
+    for _ in range(25):
+        gene = rng.integers(0, len(OPTIONS), 7).astype(np.int32)
+        idx_full = np.repeat(gene, counts_np)
+        collapsed = float(huscf_iteration_latency_jax(
+            t_reps, jnp.asarray(gene),
+            jnp.asarray(counts_np, jnp.float32)))
+        full = float(huscf_iteration_latency_jax(t_full,
+                                                 jnp.asarray(idx_full)))
+        assert _rel_err(collapsed, full) < REL_TOL
+
+
+def test_eval_is_transfer_free():
+    """The table-driven evaluation must not pull anything to host: it
+    is the GA fitness running inside the per-round search dispatch."""
+    devices = _mix(4)
+    tables = build_latency_tables(devices, PAPER_SERVER, batch=64)
+    fn = jax.jit(lambda pop: population_latency(tables, pop))
+    pop = jnp.zeros((8, 4), jnp.int32)
+    with jax.transfer_guard("disallow_explicit"):
+        out = fn(pop)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("model", [
+    fedgan_iteration_latency, hflgan_iteration_latency,
+    pflgan_iteration_latency,
+    lambda d, b: mdgan_iteration_latency(d, batch=b),
+    lambda d, b: fedsplitgan_iteration_latency(d, batch=b),
+])
+def test_baseline_batch_monotone(model):
+    """Sanity for every baseline latency model: a bigger batch can
+    never be faster (all terms scale with b)."""
+    devices = _mix(6)
+    prev = 0.0
+    for batch in (8, 16, 32, 64, 128):
+        lat = model(devices, batch)
+        assert lat >= prev
+        assert lat > 0
+        prev = lat
+
+
+def test_huscf_batch_monotone_over_options():
+    devices = _mix(4)
+    for opt in range(0, len(OPTIONS), 5):
+        cuts = [OPTIONS[opt]] * 4
+        lats = [huscf_iteration_latency(cuts, devices, PAPER_SERVER, b)
+                for b in (16, 32, 64)]
+        assert lats[0] < lats[1] < lats[2]
