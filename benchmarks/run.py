@@ -19,6 +19,10 @@ Sections:
                keeps only the 32-client scale for CI)
   train      — scan-fused device-resident epochs vs per-step loop
                (``--train-tiny`` shrinks to the 2-client CI config)
+  serve      — split-serving engine: measured U-shaped cohort
+               wall-clock vs the analytic Eq. 7/9 prediction per
+               profile mix, plus the Pallas-kernel LM decode tail
+               (``--serve-tiny`` for CI)
   quality    — paper Tables 6-13 analogue on synthetic multi-domain data
   kld        — paper Table 17 (activation vs label KLD)
   ablation   — paper Table 23 (component ablation)
@@ -56,6 +60,9 @@ def main() -> None:
                          "(CI smoke)")
     ap.add_argument("--train-tiny", action="store_true",
                     help="train section at 2 clients x 2 steps (CI smoke)")
+    ap.add_argument("--serve-tiny", action="store_true",
+                    help="serve section with a small cohort and short "
+                         "generation (CI smoke)")
     ap.add_argument("--cluster-tiny", action="store_true",
                     help="cluster section at 32 clients only (CI smoke)")
     ap.add_argument("--fed-tiny", action="store_true",
@@ -71,7 +78,7 @@ def main() -> None:
         print(f"{name},{value:.3f},{derived}", flush=True)
 
     sections = ["latency", "ga", "kernels", "federation", "cluster",
-                "train", "quality", "kld", "ablation", "roofline"]
+                "train", "serve", "quality", "kld", "ablation", "roofline"]
     if args.only:
         sections = [args.only]
 
@@ -95,6 +102,9 @@ def main() -> None:
     if "train" in sections:
         from benchmarks import train_bench
         train_bench.run(_report, tiny=args.train_tiny)
+    if "serve" in sections:
+        from benchmarks import serve_bench
+        serve_bench.run(_report, tiny=args.serve_tiny)
     if "quality" in sections:
         from benchmarks import quality_scenarios
         quality_scenarios.run(_report, fast=not args.full)

@@ -1,0 +1,103 @@
+"""Split-serving benchmark: the SplitProgram engine's measured
+wall-clock vs the analytic Eq. 7/9 forward prediction, per profile mix
+(EXPERIMENTS.md §Split serving).
+
+For each heterogeneous mix in ``serve_split.SERVE_MIXES`` the bench
+serves one bucket-padded request cohort through the U-shaped engine
+(warm, post-compile) and reports:
+
+* ``serve/gan/<mix>/measured`` — wall-clock per cohort on this host,
+  including the engine's host-side cohort staging (the thing a real
+  deployment pays);
+* ``serve/gan/<mix>/analytic`` — `program_forward_latency` for the
+  SAME compiled program and padded multiplicities, evaluated on the
+  paper's Table-4 device profiles. The derived column carries the
+  measured/analytic ratio: the analytic model prices paper edge
+  hardware while the measurement runs every segment on this container's
+  CPU, so the ratio is NOT 1 — the claim under test is that it stays
+  in one band across mixes (the schedule model and the executor move
+  together; a mix-dependent ratio would mean the executor runs a
+  different schedule than the model prices).
+
+The LM rows time the U-shaped decode tail (server trunk on the Pallas
+``mem_attention`` / ``flash_decode`` kernels, whole generation one
+jitted scan) in tokens/s.
+
+``tiny=True`` (ci_smoke) shrinks cohort and generation lengths; the
+trajectory lands in results/bench_serve.json via ``run.py --only serve
+--serve-tiny --json ...``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve_split import (SERVE_MIXES, ServeRequest,
+                                      SplitGanEngine, SplitLMConfig,
+                                      build_mix, init_gan_serving_state,
+                                      init_split_lm, split_lm_generate)
+from repro.models.gan import NUM_CLASSES, Z_DIM
+
+
+def _mk_requests(groups, n, seed=0):
+    rng = np.random.default_rng(seed)
+    n_clients = sum(g.size for g in groups)
+    return [ServeRequest(int(rng.integers(0, n_clients)),
+                         rng.normal(0, 1, Z_DIM).astype(np.float32),
+                         int(rng.integers(0, NUM_CLASSES)))
+            for _ in range(n)]
+
+
+def _bench_serve(engine, reqs, iters):
+    engine.serve(reqs)                       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        engine.serve(reqs)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(report, tiny: bool = False) -> None:
+    n_requests = 8 if tiny else 32
+    iters = 3 if tiny else 10
+    ratios = {}
+    for mix in sorted(SERVE_MIXES):
+        groups = build_mix(mix)
+        client, server = init_gan_serving_state(jax.random.PRNGKey(0),
+                                                groups)
+        engine = SplitGanEngine(groups, client, server)
+        reqs = _mk_requests(groups, n_requests, seed=1)
+        active, buckets, _ = engine.plan(reqs)
+        measured = _bench_serve(engine, reqs, iters)
+        analytic = engine.predict_latency(reqs, padded=True)
+        ratios[mix] = measured / analytic
+        report(f"serve/gan/{mix}/measured", measured * 1e6,
+               f"requests={n_requests} cuts={len(active)} "
+               f"buckets={'x'.join(map(str, buckets))}")
+        report(f"serve/gan/{mix}/analytic", analytic * 1e6,
+               f"ratio={measured / analytic:.1f}")
+    if len(ratios) > 1:
+        vals = sorted(ratios.values())
+        report("serve/gan/ratio_spread", vals[-1] / vals[0] * 1.0,
+               "max/min measured-vs-analytic ratio across mixes "
+               "(schedule-model agreement; dimensionless, not us)")
+
+    # LM decode tail: server trunk on the Pallas kernels, one jitted scan
+    batch, prompt, gen = (2, 16, 8) if tiny else (4, 64, 32)
+    cfg = SplitLMConfig(s_max=prompt + gen + 16)
+    params = init_split_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt)),
+                         dtype=jnp.int32)
+    fn = jax.jit(lambda p, t: split_lm_generate(cfg, p, t, gen))
+    jax.block_until_ready(fn(params, tokens))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(params, tokens))
+    per_call = (time.perf_counter() - t0) / iters
+    report("serve/lm/decode_tail", per_call * 1e6,
+           f"batch={batch} gen={gen} "
+           f"tok_s={batch * gen / per_call:.0f} "
+           f"server_blocks=[{cfg.head_end},{cfg.tail_start})")

@@ -50,6 +50,13 @@ python -m benchmarks.run --only cluster --cluster-tiny \
 python -m benchmarks.run --only federation --fed-tiny \
     --json results/bench_federation.json
 
+# Split-serving engine, tiny config (8-request cohorts, short LM
+# generation): keeps the SplitProgram executor + analytic-prediction
+# comparison and the Pallas decode tail compiling/running; the
+# measured-vs-analytic ratios land on their own perf trajectory.
+python -m benchmarks.run --only serve --serve-tiny \
+    --json results/bench_serve.json
+
 # On-device GA cut search, tiny config (population 64 x 20 clients):
 # host oracle vs fused search plus the per-round re-optimization
 # microbench, appended to its own perf trajectory.

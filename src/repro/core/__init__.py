@@ -14,8 +14,14 @@ from repro.core.kld import (activation_weights, activation_weights_jax,
                             cohort_federation_weights_jax,
                             kl_divergence)
 from repro.core.registry import ClientRegistry
-from repro.core.splitting import ProfileGroup, group_by_profile
+from repro.core.splitting import ProfileGroup, bucket_size, group_by_profile
+from repro.core.segments import (SplitProgram, compile_split_program,
+                                 join_barrier_scan, make_apply,
+                                 program_forward_latency,
+                                 program_iteration_latency,
+                                 program_net_latency)
 from repro.core.federation import (federate_client_params,
                                    federate_client_params_device,
                                    fedavg_uniform, weighted_average_stacked)
-from repro.core.huscf import HuSCFConfig, HuSCFTrainer, build_net_apply
+from repro.core.huscf import (HuSCFConfig, HuSCFTrainer, build_net_apply,
+                              build_net_apply_legacy)

@@ -76,7 +76,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.splitting import ProfileGroup, client_owned_layers, layer_pair
+from repro.core.splitting import (ProfileGroup, bucket_size,
+                                  client_owned_layers, layer_pair)
 from repro.sharding.policy import client_axes, group_client_axes
 
 # Segment-count padding: round the number of (layer, cluster) blocks up
@@ -125,6 +126,205 @@ class _SegmentEntry:
     sid1: int
     treedef: Any
     leaves: Tuple[_LeafSpec, ...]
+
+
+# ---------------------------------------------------------------------------
+# bucket-padded chunk stream: one compiled program per *bucket* layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ChunkedLayout:
+    """Structural signature of a bucket-padded chunked round: everything
+    the traced program bakes in, with every group/population size
+    rounded up to its power-of-two bucket (`splitting.bucket_size`).
+    Two plans with the same layout — e.g. before and after a churn
+    event that stays within the buckets — share one compiled program
+    (module-level ``_CHUNKED_FNS``); actual sizes enter the trace as
+    runtime validity masks, not shapes. Group names appear because they
+    are pytree dict keys of the params argument (a renamed group is a
+    different jit-visible structure)."""
+    groups: Tuple[Tuple[str, int, Tuple[int, ...]], ...]
+    # (gname, bucket_size, owned layers in entries order)
+    layers: Tuple[Tuple[int, int, int, Any, Tuple[_LeafSpec, ...]], ...]
+    # (layer, col0, width, treedef, leaf specs), ascending layer
+    n_cols: int
+    S: int                      # padded segment count
+    C: int                      # static cluster bound
+    chunk: int
+    use_kernel: bool
+    with_cohort: bool
+
+
+_CHUNKED_FNS: Dict[Tuple[_ChunkedLayout, bool], Callable] = {}
+
+
+def _chunked_fn_cache_stats() -> Dict[str, int]:
+    """Test hook: number of shared chunked programs and their summed
+    jit-trace counts (cache stability across churn asserts on this)."""
+    return {"programs": len(_CHUNKED_FNS),
+            "traces": sum(f._cache_size() for f in _CHUNKED_FNS.values())}
+
+
+def _accumulate_chunks_padded(layout: _ChunkedLayout, net_params,
+                              cids_by_group, kg_by_group, w_all, lab_all,
+                              part_all, zero_seg):
+    """Bucket-padded twin of ``FederationPlan._accumulate_chunks``: the
+    scan trip count is ``ceil(bucket / chunk)`` (static per *bucket*,
+    not per population) and the actual group size ``kg`` arrives as a
+    traced scalar feeding the validity mask. Padded rows carry zero
+    weight, so every chunk's ``A_c`` columns for them are zero and the
+    accumulator matches the unpadded stream bit-for-bit (0.0
+    contributions either way)."""
+    C, S, c = layout.C, layout.S, layout.chunk
+    layer_ids = [l for l, _, _, _, _ in layout.layers]
+    Lpos = len(layer_ids)
+    acc = jnp.zeros((S, layout.n_cols), jnp.float32)
+    mass = jnp.zeros(S, jnp.float32)
+    for gname, Bg, owned_t in layout.groups:
+        if Bg == 0:
+            continue
+        owned = set(owned_t)
+        cids_g = cids_by_group[gname]            # [Bg] padded
+        kg = kg_by_group[gname]                  # traced actual size
+
+        def body(carry, i, gname=gname, owned=owned, Bg=Bg, kg=kg,
+                 cids_g=cids_g):
+            acc, mass = carry
+            idx = i * c + jnp.arange(c)
+            # rows past the actual size (padding and the tail-chunk
+            # overhang alike) get zero weight; the gather clamps to the
+            # static bucket bound.
+            valid = (idx < kg).astype(jnp.float32)
+            idxc = jnp.minimum(idx, Bg - 1)
+            cid_c = cids_g[idxc]
+            lab_c = lab_all[cid_c]
+            w_c = w_all[cid_c]
+            fb_c = part_all[cid_c]
+            onehot = jax.nn.one_hot(lab_c, C, dtype=jnp.float32)
+            parts = []
+            for l, _, wdt, _, _ in layout.layers:
+                if l in owned:
+                    leaves = jax.tree_util.tree_leaves(
+                        net_params[gname][str(l)])
+                    parts.append(jnp.concatenate(
+                        [jnp.take(x, idxc, axis=0).reshape(c, -1)
+                         .astype(jnp.float32) for x in leaves],
+                        axis=1))
+                else:
+                    parts.append(jnp.zeros((c, wdt), jnp.float32))
+            theta_c = jnp.concatenate(parts, axis=1)         # [c, D]
+            ablocks = []
+            for li, l in enumerate(layer_ids):
+                if l in owned:
+                    w_eff = jnp.where(zero_seg[li * C + lab_c],
+                                      fb_c, w_c) * valid
+                    ablocks.append(onehot.T * w_eff[None, :])
+                else:
+                    ablocks.append(jnp.zeros((C, c), jnp.float32))
+            if S > Lpos * C:
+                ablocks.append(jnp.zeros((S - Lpos * C, c), jnp.float32))
+            A_c = jnp.concatenate(ablocks, axis=0)           # [S, c]
+            if layout.use_kernel:
+                from repro.kernels import ops as kops
+                part = kops.clustered_agg(A_c, theta_c)
+            else:
+                part = A_c @ theta_c
+            return (acc + part.astype(jnp.float32),
+                    mass + A_c.sum(1)), None
+
+        (acc, mass), _ = jax.lax.scan(body, (acc, mass),
+                                      jnp.arange(-(-Bg // c)))
+    return acc, mass
+
+
+def _unflatten_padded(layout: _ChunkedLayout, agg, seg_ids,
+                      originals=None, recv=None):
+    """Bucket-row twin of ``FederationPlan._unflatten``: leaves come
+    back with bucket-sized leading axes (the caller slices ``[:Kg]``
+    outside the jit). Padded copies gather garbage segment rows —
+    harmless, they are sliced off."""
+    linfo = {l: (c0, w, td, specs) for l, c0, w, td, specs in layout.layers}
+    out: Dict[str, Dict[str, Any]] = {}
+    sid = 0
+    for gname, Bg, owned_t in layout.groups:
+        for l in owned_t:
+            c0, width, treedef, specs = linfo[l]
+            s0, s1 = sid, sid + Bg
+            sid += Bg
+            block = jnp.take(agg[:, c0:c0 + width], seg_ids[s0:s1], axis=0)
+            mask = None if recv is None else recv[s0:s1]
+            orig_leaves = (None if originals is None else
+                           jax.tree_util.tree_leaves(
+                               originals[gname][str(l)]))
+            leaves, off = [], 0
+            for i, s in enumerate(specs):
+                leaf = (block[:, off:off + s.size]
+                        .reshape((Bg,) + s.shape).astype(s.dtype))
+                if mask is not None:
+                    m = mask.reshape((Bg,) + (1,) * len(s.shape))
+                    leaf = jnp.where(m, leaf, orig_leaves[i])
+                leaves.append(leaf)
+                off += s.size
+            out.setdefault(gname, {})[str(l)] = \
+                jax.tree_util.tree_unflatten(treedef, leaves)
+    return out
+
+
+def _make_chunked_padded_fn(layout: _ChunkedLayout, donate: bool) -> Callable:
+    """The shared bucket-padded chunked round. All per-population data
+    — padded params, padded cids, actual sizes, padded copy maps,
+    padded weights/labels — arrives as traced operands, so the program
+    closes over nothing plan-specific and any plan with this layout
+    dispatches the same compiled computation."""
+    C, S = layout.C, layout.S
+
+    def run(net_params, cids, kg, copy_lpos, copy_cid, copy_valid,
+            w_all, lab_all, cohort_mask=None):
+        w_all = w_all.astype(jnp.float32)
+        lab_all = lab_all.astype(jnp.int32)
+        part = (cohort_mask.astype(jnp.float32) if layout.with_cohort
+                else jnp.ones_like(w_all))
+        vf = copy_valid.astype(jnp.float32)
+        seg_of_copy = copy_lpos * C + lab_all[copy_cid]
+        # padded copies point at client 0 — mask them out of the
+        # segment masses so the uniform-fallback detection sees only
+        # real members.
+        raw = jax.ops.segment_sum(w_all[copy_cid] * vf, seg_of_copy,
+                                  num_segments=S)
+        cnt = jax.ops.segment_sum(part[copy_cid] * vf, seg_of_copy,
+                                  num_segments=S)
+        zero_seg = (raw <= 0) & (cnt > 0)
+        acc, mass = _accumulate_chunks_padded(
+            layout, net_params, cids, kg, w_all, lab_all, part, zero_seg)
+        agg = acc / jnp.maximum(mass, 1e-20)[:, None]
+        seg_ids = seg_of_copy.astype(jnp.int32)
+        if layout.with_cohort:
+            recv = cohort_mask.astype(bool)[copy_cid]
+            return _unflatten_padded(layout, agg, seg_ids,
+                                     originals=net_params, recv=recv)
+        return _unflatten_padded(layout, agg, seg_ids)
+
+    if layout.with_cohort:
+        def fn(net_params, cids, kg, copy_lpos, copy_cid, copy_valid,
+               w_all, lab_all, cohort_mask):
+            return run(net_params, cids, kg, copy_lpos, copy_cid,
+                       copy_valid, w_all, lab_all, cohort_mask)
+    else:
+        def fn(net_params, cids, kg, copy_lpos, copy_cid, copy_valid,
+               w_all, lab_all):
+            return run(net_params, cids, kg, copy_lpos, copy_cid,
+                       copy_valid, w_all, lab_all)
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+
+def _pad_rows(x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Zero-pad the leading axis to ``b`` rows (device-side op — safe
+    under transfer_guard)."""
+    n = x.shape[0]
+    if n == b:
+        return x
+    return jnp.concatenate(
+        [x, jnp.zeros((b - n,) + x.shape[1:], x.dtype)], axis=0)
 
 
 class FederationPlan:
@@ -683,6 +883,61 @@ class FederationPlan:
                 return run(net_params, weights, labels)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
+    def _chunked_layout(self, num_clusters: int, use_kernel: bool,
+                        with_cohort: bool) -> _ChunkedLayout:
+        """Bucket-padded structural signature of this plan's chunked
+        round (see ``_ChunkedLayout``)."""
+        C = int(num_clusters)
+        n_seg = len(self._layer_rows) * C
+        S = max(_SEGMENT_PAD, -(-n_seg // _SEGMENT_PAD) * _SEGMENT_PAD)
+        by_layer: Dict[int, Tuple] = {}
+        for e in self.entries:
+            by_layer.setdefault(e.layer, (e.col0, e.width, e.treedef,
+                                          e.leaves))
+        layers = tuple((l,) + by_layer[l] for l in sorted(by_layer))
+        groups = tuple((g, bucket_size(r1 - r0), tuple(self._owned[g]))
+                       for g, (r0, r1) in self._group_rows.items())
+        return _ChunkedLayout(groups, layers, self.n_cols, S, C,
+                              int(self.chunk_size), use_kernel,
+                              with_cohort)
+
+    def _chunked_operands(self):
+        """Per-plan device operands of the shared chunked program:
+        bucket-padded group cids, traced actual sizes, and the
+        bucket-strided copy->(layer_pos, cid, valid) maps. Built once
+        per plan and cached as device arrays so repeat rounds do zero
+        host->device transfers (transfer_guard-safe after warm-up)."""
+        ops = getattr(self, "_chunk_ops", None)
+        if ops is not None:
+            return ops
+        layer_pos = {l: i for i, (l, _, _) in enumerate(self._layer_rows)}
+        cids_arr = np.asarray(self.row_cids, np.int64)
+        cids_pad: Dict[str, jnp.ndarray] = {}
+        kg: Dict[str, jnp.ndarray] = {}
+        lpos_l, cid_l, valid_l = [], [], []
+        for g, (r0, r1) in self._group_rows.items():
+            Kg = r1 - r0
+            Bg = bucket_size(Kg)
+            c = np.zeros(Bg, np.int32)
+            c[:Kg] = cids_arr[r0:r1]
+            cids_pad[g] = jnp.asarray(c)
+            kg[g] = jnp.asarray(Kg, jnp.int32)
+            for l in self._owned[g]:
+                lpos_l.append(np.full(Bg, layer_pos[l], np.int32))
+                cc = np.zeros(Bg, np.int32)
+                cc[:Kg] = cids_arr[r0:r1]
+                cid_l.append(cc)
+                vv = np.zeros(Bg, bool)
+                vv[:Kg] = True
+                valid_l.append(vv)
+
+        def cat(xs, dtype):
+            return jnp.asarray(np.concatenate(xs) if xs
+                               else np.zeros(0, dtype))
+        self._chunk_ops = (cids_pad, kg, cat(lpos_l, np.int32),
+                           cat(cid_l, np.int32), cat(valid_l, bool))
+        return self._chunk_ops
+
     def aggregate_chunked(self, net_params: Dict[str, Dict[str, Any]],
                           weights: jnp.ndarray, labels: jnp.ndarray,
                           num_clusters: int, use_kernel: bool = False,
@@ -696,20 +951,65 @@ class FederationPlan:
         ``lax.scan`` of client chunks and a single normalize at the
         end divides them out. Equivalence with the dense paths is
         tolerance-bounded (re-associated f32 summation), not
-        bit-exact."""
+        bit-exact.
+
+        Unsharded rounds run the *shared* bucket-padded program
+        (module-level ``_CHUNKED_FNS``, one per ``_ChunkedLayout``):
+        group sizes pad to power-of-two buckets, scan trip counts are
+        per-bucket, and actual sizes arrive as traced validity masks —
+        so a churned population whose per-group counts stay within the
+        buckets reuses the compiled round instead of retracing.
+        Numerically identical to the unpadded stream (padded rows carry
+        zero weight). The sharded stream (``_chunk_axes``) keeps its
+        per-plan program: shard_map bakes the mesh and per-shard row
+        blocks into the closure, and padding would break the per-group
+        divisibility contract."""
         if self.chunk_size is None:
             raise ValueError("plan was built without chunk_size; pass "
                              "chunk_size= to get_federation_plan")
-        key = ("chunked", int(num_clusters), use_kernel, donate,
-               cohort_mask is not None)
-        if key not in self._agg_fns:
-            self._agg_fns[key] = self._make_agg_chunked_fn(
-                int(num_clusters), use_kernel, donate,
-                cohort_mask is not None)
+        if self._chunk_axes is not None:
+            key = ("chunked", int(num_clusters), use_kernel, donate,
+                   cohort_mask is not None)
+            if key not in self._agg_fns:
+                self._agg_fns[key] = self._make_agg_chunked_fn(
+                    int(num_clusters), use_kernel, donate,
+                    cohort_mask is not None)
+            if cohort_mask is not None:
+                return self._agg_fns[key](net_params, weights, labels,
+                                          cohort_mask)
+            return self._agg_fns[key](net_params, weights, labels)
+
+        layout = self._chunked_layout(int(num_clusters), use_kernel,
+                                      cohort_mask is not None)
+        fkey = (layout, donate)
+        fn = _CHUNKED_FNS.get(fkey)
+        if fn is None:
+            fn = _CHUNKED_FNS[fkey] = _make_chunked_padded_fn(layout,
+                                                              donate)
+        cids_pad, kg, lpos, cid, valid = self._chunked_operands()
+        KB = bucket_size(int(weights.shape[0]))
+        params_pad: Dict[str, Dict[str, Any]] = {}
+        for gname, Bg, _ in layout.groups:
+            params_pad[gname] = {
+                l: jax.tree_util.tree_map(
+                    lambda x: _pad_rows(jnp.asarray(x), Bg), tree)
+                for l, tree in net_params[gname].items()}
+        args = [params_pad, cids_pad, kg, lpos, cid, valid,
+                _pad_rows(jnp.asarray(weights), KB),
+                _pad_rows(jnp.asarray(labels), KB)]
         if cohort_mask is not None:
-            return self._agg_fns[key](net_params, weights, labels,
-                                      cohort_mask)
-        return self._agg_fns[key](net_params, weights, labels)
+            args.append(_pad_rows(jnp.asarray(cohort_mask), KB))
+        out_pad = fn(*args)
+        out: Dict[str, Dict[str, Any]] = {}
+        for gname, Bg, _ in layout.groups:
+            Kg = self._group_rows[gname][1] - self._group_rows[gname][0]
+            if Bg == Kg:
+                out[gname] = out_pad[gname]
+            else:
+                out[gname] = {
+                    l: jax.tree_util.tree_map(lambda x: x[:Kg], tree)
+                    for l, tree in out_pad[gname].items()}
+        return out
 
     # -- memory envelopes --------------------------------------------------
     def dense_buffer_bytes(self) -> int:

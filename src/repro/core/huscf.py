@@ -36,6 +36,9 @@ from repro.core.federation import (donate_default, federate_client_params,
 from repro.core.genetic import CutSearcher, GAConfig, optimize_cuts
 from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES, PAPER_SERVER, huscf_iteration_latency
 from repro.core.registry import ClientRegistry
+from repro.core.segments import (compile_split_program, make_apply,
+                                 head_pass as _head_pass,
+                                 tail_pass as _tail_pass)
 from repro.core.splitting import (ProfileGroup, client_owned_layers,
                                   group_by_profile, layer_pair,
                                   server_union_span)
@@ -99,24 +102,21 @@ class HuSCFConfig:
     # groups, migrated client/server params, re-staged dataset) and
     # invalidates the FederationPlan cache. 1 = every round (cheap: one
     # cached-program dispatch per search). None = static cuts (paper).
+    split_program: bool = True
+    # True: forward/backward graphs execute the compiled SplitProgram
+    # (core/segments.py) shared with the latency model and the serving
+    # engine. False: the legacy hand-rolled per-group loops
+    # (build_net_apply_legacy) — kept as the bit-exactness oracle
+    # (tests/test_segments.py).
 
 
 # ---------------------------------------------------------------------------
 # functional forward passes over the split topology
 # ---------------------------------------------------------------------------
 
-def _head_pass(defs, params: Dict[str, Any], x, stop: int, train: bool):
-    new = {}
-    for l in range(stop):
-        x, new[str(l)] = defs[l][1](params[str(l)], x, train)
-    return x, new
-
-
-def _tail_pass(defs, params: Dict[str, Any], x, start: int, n: int, train: bool):
-    new = {}
-    for l in range(start, n):
-        x, new[str(l)] = defs[l][1](params[str(l)], x, train)
-    return x, new
+# client-side segment passes (_head_pass/_tail_pass) now live in
+# core.segments as head_pass/tail_pass, shared with the serving
+# executor; imported above under their old names for the legacy oracle.
 
 
 def build_net_apply(groups: Sequence[ProfileGroup], net: str,
@@ -126,6 +126,25 @@ def build_net_apply(groups: Sequence[ProfileGroup], net: str,
     (outputs {gname: [K,b,...]}, new_client, new_server, middles).
 
     inputs: {gname: tuple of per-client-stacked arrays fed to layer 0}.
+
+    Compiles the cut configuration into a `core.segments.SplitProgram`
+    and returns its executor — the same program structure the analytic
+    latency model and the split-serving engine consume. Bit-exact with
+    `build_net_apply_legacy` (the pre-SplitProgram loops, kept as the
+    oracle behind ``HuSCFConfig.split_program=False``).
+    """
+    program = compile_split_program(groups, net)
+    return make_apply(program, capture_middle=capture_middle,
+                      concat_groups=concat_groups)
+
+
+def build_net_apply_legacy(groups: Sequence[ProfileGroup], net: str,
+                           capture_middle: bool = False,
+                           concat_groups: bool = True):
+    """Pre-SplitProgram implementation: hand-rolled per-group loops that
+    re-derive layer activity from the cuts inline. Semantically (and
+    bit-) identical to `build_net_apply`; survives as the equivalence
+    oracle for tests and for ``HuSCFConfig.split_program=False``.
 
     concat_groups=True is the paper-faithful schedule (the server
     concatenates all clients' activations per layer, so BatchNorm stats
@@ -395,8 +414,10 @@ class HuSCFTrainer:
 
     # -- one training step (pure body, shared by both epoch paths) ---------
     def _build_step_core(self) -> Callable:
-        gen_apply = build_net_apply(self.groups, "G")
-        disc_apply = build_net_apply(self.groups, "D", capture_middle=True)
+        build = (build_net_apply if self.cfg.split_program
+                 else build_net_apply_legacy)
+        gen_apply = build(self.groups, "G")
+        disc_apply = build(self.groups, "D", capture_middle=True)
         groups = self.groups
         total_clients = sum(g.size for g in groups)
         opt_update_g, opt_update_d = self._opt_update_g, self._opt_update_d
@@ -982,7 +1003,9 @@ class HuSCFTrainer:
                  ) -> Tuple[np.ndarray, np.ndarray]:
         """Generate len(labels) images by cycling clients. labels [N]."""
         if self._gen_fn is None:
-            gen_apply = build_net_apply(self.groups, "G")
+            build = (build_net_apply if self.cfg.split_program
+                     else build_net_apply_legacy)
+            gen_apply = build(self.groups, "G")
 
             def gen(state, z, y):
                 out, _, _, _ = gen_apply(state["G"]["client"],

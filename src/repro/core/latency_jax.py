@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.latency import (Cut, DeviceProfile, PAPER_SERVER,
                                 all_cut_options)
+from repro.core.segments import join_barrier_scan
 from repro.models.gan import DISC_LAYER_COSTS, GEN_LAYER_COSTS
 
 
@@ -154,20 +155,14 @@ def _one_net_latency_jax(t: NetTables, idx: jnp.ndarray,
     barr_b = jnp.max(jnp.where(tt[None, :] == li[:, None] + 1,
                                (tail_b + up_b)[None, :], 0.0), axis=1)
 
-    def sched(s, x):
-        a, bar = x
-        s = jnp.maximum(s + a, bar)
-        return s, s
-
     # Eq. 7: S_f[i+1] = max(S_f[i] + srv_f[i] * n_active[i], barrier[i])
-    _, s_f = jax.lax.scan(sched, jnp.float32(0.0),
-                          (t.srv_f * n_act, barr_f))
+    # — the shared SplitProgram recurrence (core.segments).
+    s_f = join_barrier_scan(t.srv_f * n_act, barr_f)
     s_f = jnp.concatenate([jnp.zeros(1, jnp.float32), s_f])      # [n+1]
     l_f = jnp.max(s_f[tt] + down_f + tail_f)
     # Eq. 8: S_b[i] = max(S_b[i+1] + srv_b[i] * n_active[i], barrier[i]),
     # swept top layer down (reverse scan; ys stay in layer order)
-    _, s_b = jax.lax.scan(sched, jnp.float32(0.0),
-                          (t.srv_b * n_act, barr_b), reverse=True)
+    s_b = join_barrier_scan(t.srv_b * n_act, barr_b, reverse=True)
     s_b = jnp.concatenate([s_b, jnp.zeros(1, jnp.float32)])      # [n+1]
     l_b = jnp.max(s_b[h] + down_b + head_b)
     return l_f, l_b

@@ -44,6 +44,20 @@ def group_by_profile(devices: Sequence[DeviceProfile],
     return [table[k] for k in sorted(table.keys(), key=str)]
 
 
+def bucket_size(n: int) -> int:
+    """Round a group/cohort size up to the next power of two (>= 1).
+
+    Shared by every consumer that pads a ragged client axis to a small
+    set of compiled shapes — the SplitProgram serving executor and the
+    chunk-streamed federation round — so a churning population lands on
+    the same bucket (and the same compiled program) as long as its size
+    stays within the bucket.
+    """
+    if n < 0:
+        raise ValueError(f"bucket_size of negative count {n}")
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
 def head_layers(cut_pair: Tuple[int, int]) -> range:
     return range(0, cut_pair[0])
 

@@ -19,6 +19,7 @@ Images are [H, W, 1] float32 in [-1, 1] (cGAN tanh range), default 28x28.
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Tuple
 
 import jax
@@ -95,11 +96,17 @@ _FAMILIES = {"gratings": _gratings, "blobs": _blobs,
              "checkers": _checkers, "rings": _rings}
 
 
+def _domain_salt(domain: str) -> int:
+    # NOT hash(): str hashing is randomized per process (PYTHONHASHSEED),
+    # which made seed= silently non-reproducible across runs.
+    return zlib.crc32(domain.encode()) % (2 ** 16)
+
+
 def make_dataset(domain: str, n: int, *, img_size: int = 28, seed: int = 0,
                  noise: float = 0.12) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (images [n, H, W, 1] in [-1,1], labels [n] int32)."""
     assert domain in _FAMILIES, f"unknown domain {domain}"
-    rng = np.random.default_rng(seed + hash(domain) % (2 ** 16))
+    rng = np.random.default_rng(seed + _domain_salt(domain))
     labels = rng.integers(0, NUM_CLASSES, n).astype(np.int32)
     imgs = _FAMILIES[domain](labels, img_size, rng).astype(np.float32)
     imgs = imgs + rng.normal(0, noise, imgs.shape).astype(np.float32)
@@ -109,7 +116,7 @@ def make_dataset(domain: str, n: int, *, img_size: int = 28, seed: int = 0,
 
 def make_class_balanced(domain: str, per_class: int, *, img_size: int = 28,
                         seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    rng = np.random.default_rng(seed + 7 + hash(domain) % (2 ** 16))
+    rng = np.random.default_rng(seed + 7 + _domain_salt(domain))
     labels = np.repeat(np.arange(NUM_CLASSES, dtype=np.int32), per_class)
     imgs = _FAMILIES[domain](labels, img_size, rng).astype(np.float32)
     imgs = imgs + rng.normal(0, 0.12, imgs.shape).astype(np.float32)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_decode as _fd
 from repro.kernels import kmeans_assign as _km
+from repro.kernels import mem_attention as _ma
 from repro.kernels import weighted_agg as _wa
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -54,3 +55,14 @@ def kmeans_assign(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  cache_len: jnp.ndarray) -> jnp.ndarray:
     return _fd.flash_decode(q, k, v, cache_len, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def mem_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  lens: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Memory-efficient prefill attention: q [B, S, H, hd],
+    k/v [B, S, KV, hd], lens [B] -> [B, S, H, hd] without ever
+    materializing the [S, S] score tensor (the split-serving engine's
+    server-segment prefill block)."""
+    return _ma.mem_attention(q, k, v, lens, causal=causal,
+                             interpret=INTERPRET)

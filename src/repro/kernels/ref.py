@@ -44,6 +44,33 @@ def kmeans_assign_ref(x: jnp.ndarray, centers: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(d2, axis=1).astype(jnp.int32)
 
 
+def mem_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      lens: jnp.ndarray, causal: bool = True
+                      ) -> jnp.ndarray:
+    """Full prefill GQA attention, dense scores (the thing the Pallas
+    kernel avoids materializing).
+
+    q [B, S, H, hd]; k/v [B, S, KV, hd]; lens [B] or scalar valid
+    lengths. Returns [B, S, H, hd] (f32 accumulated, cast to q.dtype).
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh,
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    lens_b = jnp.broadcast_to(jnp.asarray(lens, jnp.int32), (B,))
+    mask = jnp.arange(S)[None, :] < lens_b[:, None]        # [B, S]
+    mask = mask[:, None, None, None, :]
+    if causal:
+        mask = mask & (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None]
+                       )[None, None, None, :, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
 def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      cache_len: jnp.ndarray) -> jnp.ndarray:
     """Single-token GQA decode attention.

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.federation import donate_default
 from repro.models import transformer as T
 
 
@@ -55,22 +56,35 @@ def main(argv=None):
           f"{t_prefill:.2f}s ({args.batch * args.prompt_len / t_prefill:.0f} "
           f"tok/s)")
 
-    decode = jax.jit(lambda p, t, c: T.decode_step(cfg, p, t, c))
-    cur = jnp.argmax(logits, -1).astype(jnp.int32)
-    outs = [np.asarray(cur)]
+    # The whole greedy/sampled decode tail is one jitted lax.scan: the
+    # old loop round-tripped to host every token (np.asarray per step)
+    # and re-dispatched decode_step gen-1 times. The KV cache rides the
+    # scan carry and is donated into the call where the backend can
+    # alias it (donate_default: TPU/GPU only — CPU XLA ignores it).
+    def decode_tail(p, cur0, cache, key):
+        def body(carry, _):
+            cur, cache, key = carry
+            logits, cache = T.decode_step(cfg, p, cur, cache)
+            if args.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits / args.temperature).astype(jnp.int32)
+            else:
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            return (nxt, cache, key), nxt
+
+        _, ys = jax.lax.scan(body, (cur0, cache, key), None,
+                             length=args.gen - 1)
+        return jnp.concatenate([cur0[:, None], ys.T], axis=1)
+
+    decode_fn = jax.jit(
+        decode_tail, donate_argnums=(2,) if donate_default() else ())
+    cur0 = jnp.argmax(logits, -1).astype(jnp.int32)
     t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cur, cache)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            cur = jax.random.categorical(sub, logits / args.temperature
-                                         ).astype(jnp.int32)
-        else:
-            cur = jnp.argmax(logits, -1).astype(jnp.int32)
-        outs.append(np.asarray(cur))
-    jax.block_until_ready(logits)
+    toks_dev = decode_fn(params, cur0, cache, key)
+    jax.block_until_ready(toks_dev)
     t_dec = time.time() - t0
-    toks = np.stack(outs, 1)
+    toks = np.asarray(toks_dev)
     print(f"[serve] decoded {args.gen} tokens/seq: {t_dec:.2f}s "
           f"({args.batch * max(args.gen - 1, 1) / max(t_dec, 1e-9):.0f} tok/s)")
     print(f"[serve] sample continuation (seq 0): {toks[0][:16].tolist()}")

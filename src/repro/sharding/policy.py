@@ -87,6 +87,24 @@ def group_client_axes(mesh, group_sizes: Sequence[int]):
     return None
 
 
+def cohort_axes(mesh, bucket_sizes: Sequence[int]):
+    """Mesh axes to shard bucket-padded serving-cohort rows over, or None.
+
+    The split-serving engine (launch/serve_split.py) pads each cut's
+    request rows to a power-of-two bucket (`splitting.bucket_size`)
+    before staging them, so — unlike the raw ragged counts
+    `group_client_axes` sees during training — the row counts here are
+    always powers of two and divide any power-of-two data-axes product
+    whenever bucket >= mesh. Same contract as `group_client_axes`: the
+    common sanitize-style spec entry when every bucket divides by the
+    data-axes product, else None (the engine then runs unsharded).
+    """
+    specs = {client_axes(mesh, int(b)) for b in bucket_sizes}
+    if len(specs) == 1:
+        return specs.pop()
+    return None
+
+
 def client_stack_sharding(mesh, shape: Sequence[int]) -> NamedSharding:
     """NamedSharding for a client-stacked ``[K, ...]`` host array: rows
     over the client axes when divisible (``client_axes``), replicated

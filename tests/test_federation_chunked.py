@@ -481,6 +481,73 @@ def _check_chunked_cohort_sharded():
                                           np.asarray(b[pos]))
 
 
+# --------------------------------------------------------------------------
+# bucket-padded program sharing (satellite: compile-cache stability)
+# --------------------------------------------------------------------------
+
+def test_chunked_program_shared_across_bucket_sizes():
+    """Two populations whose per-group sizes differ but land in the
+    same power-of-two buckets (3 -> pad 4 vs true 4) execute the SAME
+    compiled chunked round — the layout is keyed on buckets, actual
+    counts arrive as traced scalars."""
+    from repro.core.federation import _chunked_fn_cache_stats
+    g9, p9 = build_population(n_clients=9, n_profiles=3, seed=1)
+    g12, p12 = build_population(n_clients=12, n_profiles=3, seed=2)
+    assert [g.name for g in g9] == [g.name for g in g12]
+    rng = np.random.default_rng(3)
+
+    def fed(groups, params, k):
+        return federate_client_params(groups, params, rng.random(k),
+                                      np.arange(k) % N_CLUSTERS,
+                                      n_layers=N_LAYERS, chunk_size=2)
+    a = fed(g9, p9, 9)
+    after_first = _chunked_fn_cache_stats()
+    b = fed(g12, p12, 12)
+    after_second = _chunked_fn_cache_stats()
+    assert after_second == after_first        # no new program, no retrace
+    # and the padded round still computes the right thing
+    dense = federate_client_params(g12, p12, rng.random(12),
+                                   np.arange(12) % N_CLUSTERS,
+                                   n_layers=N_LAYERS)
+    assert set(b) == set(dense)
+    del a
+
+
+def test_trainer_chunked_cache_stable_across_churn():
+    """The regression the bucket padding exists for: a churn rebuild
+    flushes the trainer's FederationPlans, but as long as the regrouped
+    sizes stay within their buckets the rebuilt plan replays the SAME
+    compiled chunked round — no recompile per joined/left client."""
+    from repro.core.federation import _chunked_fn_cache_stats
+    from repro.core.genetic import GAConfig
+    from repro.core.huscf import HuSCFConfig, HuSCFTrainer
+    from repro.core.latency import PAPER_DEVICES
+    from test_recut import mk_clients
+    cfg = HuSCFConfig(batch=8, federate_every=1, seed=0, steps_per_epoch=1,
+                      warmup_fed_rounds=0, agg_chunk=2)
+    # two profiles -> a 256-point gene space the 128-individual GA
+    # certainly solves identically before and after churn (test_recut's
+    # tie-stability argument), so only group SIZES change.
+    ga = GAConfig(population_size=128, generations=12, seed=0,
+                  early_stop_patience=6)
+    clients = mk_clients(6)
+    devices = [PAPER_DEVICES[i % 2] for i in range(6)]
+    tr = HuSCFTrainer(clients, devices, config=cfg, ga_config=ga)
+    tr.train_steps(1)
+    tr.federate()
+    cuts_before = [c.as_tuple() for c in tr.cuts]
+    sizes_before = sorted(g.size for g in tr.groups)
+    stats = _chunked_fn_cache_stats()
+    # join one client on an incumbent profile: 3 -> 4 stays in bucket 4
+    joiner = mk_clients(1, seed=9, id0=6)[0]
+    tr.apply_churn(join=[(joiner, PAPER_DEVICES[0])])
+    assert [c.as_tuple() for c in tr.cuts][:6] == cuts_before
+    assert sorted(g.size for g in tr.groups) != sizes_before
+    tr.train_steps(1)
+    tr.federate()
+    assert _chunked_fn_cache_stats() == stats
+
+
 def test_chunked_sharded_multihost(multihost):
     multihost(MODULE, "_check_chunked_sharded")
 

@@ -9,6 +9,7 @@ from repro.kernels import ops, ref
 from repro.kernels.weighted_agg import clustered_agg_flat, weighted_agg_flat
 from repro.kernels.kmeans_assign import kmeans_assign
 from repro.kernels.flash_decode import flash_decode
+from repro.kernels.mem_attention import mem_attention
 
 
 @pytest.mark.parametrize("K", [1, 3, 16])
@@ -164,3 +165,73 @@ def test_flash_decode_empty_prefix_masking():
     v2 = v.at[:, 5:].set(-99.0)
     got2 = flash_decode(q, k2, v2, clen, block_s=8, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(got2), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,KV,hd", [(1, 4, 4, 16), (2, 4, 2, 16),
+                                       (3, 6, 3, 32)])
+@pytest.mark.parametrize("S,bq,bk", [(37, 16, 16), (128, 128, 128),
+                                     (300, 128, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_mem_attention_sweep(B, H, KV, hd, S, bq, bk, causal):
+    keys = jax.random.split(jax.random.PRNGKey(B * S + causal), 3)
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k = jax.random.normal(keys[1], (B, S, KV, hd))
+    v = jax.random.normal(keys[2], (B, S, KV, hd))
+    lens = jnp.asarray([S - i * 3 for i in range(B)], jnp.int32)
+    got = mem_attention(q, k, v, lens, causal=causal, block_q=bq,
+                        block_k=bk, interpret=True)
+    want = ref.mem_attention_ref(q, k, v, lens, causal=causal)
+    # rows past lens see an all-masked score row in both implementations
+    # (normalization garbage); only valid rows are contractual.
+    mask = (np.arange(S)[None, :] < np.asarray(lens)[:, None]
+            )[:, :, None, None]
+    np.testing.assert_allclose(np.where(mask, np.asarray(got), 0.0),
+                               np.where(mask, np.asarray(want), 0.0),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mem_attention_length_masking():
+    """KV past lens must not contribute to valid query rows."""
+    B, S, H, KV, hd = 2, 48, 4, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k = jax.random.normal(keys[1], (B, S, KV, hd))
+    v = jax.random.normal(keys[2], (B, S, KV, hd))
+    lens = jnp.asarray([30, 17], jnp.int32)
+    got = mem_attention(q, k, v, lens, block_q=16, block_k=16,
+                        interpret=True)
+    k2 = jnp.where((jnp.arange(S) >= 17)[None, :, None, None], 55.0, k)
+    v2 = jnp.where((jnp.arange(S) >= 17)[None, :, None, None], -55.0, v)
+    got2 = mem_attention(q, k2, v2, lens, block_q=16, block_k=16,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(got[1, :17]),
+                               np.asarray(got2[1, :17]), atol=1e-6)
+
+
+def test_mem_attention_decode_consistency():
+    """Causal prefill row t == flash_decode with a t+1-token cache (the
+    two serving kernels agree on their overlap)."""
+    B, S, H, KV, hd = 2, 24, 4, 2, 16
+    keys = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k = jax.random.normal(keys[1], (B, S, KV, hd))
+    v = jax.random.normal(keys[2], (B, S, KV, hd))
+    full = mem_attention(q, k, v, jnp.asarray(S, jnp.int32),
+                         block_q=8, block_k=8, interpret=True)
+    for t in (0, 7, S - 1):
+        dec = flash_decode(q[:, t], k, v, jnp.asarray(t + 1, jnp.int32),
+                           block_s=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(full[:, t]), np.asarray(dec),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_mem_attention_jitted_op():
+    B, S, H, KV, hd = 1, 40, 4, 4, 8
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(keys[0], (B, S, H, hd))
+    k = jax.random.normal(keys[1], (B, S, KV, hd))
+    v = jax.random.normal(keys[2], (B, S, KV, hd))
+    got = ops.mem_attention(q, k, v, jnp.asarray(S, jnp.int32))
+    want = ref.mem_attention_ref(q, k, v, jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,195 @@
+"""SplitProgram (core/segments.py): the one compiled representation of
+a cut configuration shared by training, the latency model, and serving.
+
+The acceptance bar for the refactor: the new executor is BIT-EXACT
+against the legacy `build_net_apply_legacy` loops (kept as the oracle
+behind `HuSCFConfig.split_program=False`), and the program-structure
+analytic latency is exactly the host Eq. 7-10 model.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.huscf import (HuSCFConfig, HuSCFTrainer, build_net_apply,
+                              build_net_apply_legacy)
+from repro.core.latency import (Cut, DeviceProfile, PAPER_DEVICES,
+                                PAPER_SERVER, huscf_iteration_latency)
+from repro.core.segments import (compile_split_program, join_barrier_scan,
+                                 make_apply, program_iteration_latency,
+                                 program_net_latency)
+from repro.core.splitting import group_by_profile
+from repro.models.gan import Z_DIM
+
+from test_recut import GA, mk_clients
+
+CUTS = [Cut(1, 4, 1, 4), Cut(2, 3, 2, 3), Cut(1, 3, 2, 4)]
+DEVS = [PAPER_DEVICES[0], PAPER_DEVICES[1], PAPER_DEVICES[2]]
+
+
+def _mk_groups(sizes=(2, 3, 1)):
+    devices, cuts = [], []
+    for dev, cut, n in zip(DEVS, CUTS, sizes):
+        devices += [dev] * n
+        cuts += [cut] * n
+    return group_by_profile(devices, cuts), devices, cuts
+
+
+def _init_state(groups, net, key):
+    from repro.launch.serve_split import init_gan_serving_state
+    return init_gan_serving_state(key, groups, net=net)
+
+
+def _mk_inputs(groups, net, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    inputs = {}
+    for g in groups:
+        y = jnp.asarray(rng.integers(0, 10, (g.size, batch)), jnp.int32)
+        if net == "G":
+            z = jnp.asarray(rng.normal(0, 1, (g.size, batch, Z_DIM)),
+                            jnp.float32)
+            inputs[g.name] = (z, y)
+        else:
+            img = jnp.asarray(rng.normal(0, 1, (g.size, batch, 28, 28, 1)),
+                              jnp.float32)
+            inputs[g.name] = (img, y)
+    return inputs
+
+
+# ---------------------------------------------------------------------------
+# program structure
+# ---------------------------------------------------------------------------
+
+def test_program_structure():
+    groups, _, _ = _mk_groups()
+    prog = compile_split_program(groups, "G")
+    assert prog.net == "G" and prog.n_layers == 5 and prog.middle == 2
+    assert prog.group_names == tuple(g.name for g in groups)
+    # server span is the union of every present cut's server layers
+    assert prog.server_span() == (1, 2, 3)
+    by_layer = {s.layer: s for s in prog.steps}
+    for g in groups:
+        h, t = g.cut.g_h, g.cut.g_t
+        assert g.name in by_layer[h].joins
+        assert g.name in by_layer[t - 1].departs
+        for l in range(1, 4):
+            assert (g.name in by_layer[l].active) == (h <= l < t)
+    # every group's middle layer runs on the server
+    assert all(prog.middle in range(h, t) for h, t in prog.cuts)
+    # heads/tails cover exactly the client-owned layers
+    for seg, (h, _) in zip(prog.heads, prog.cuts):
+        assert (seg.start, seg.stop) == (0, h)
+    for seg, (_, t) in zip(prog.tails, prog.cuts):
+        assert (seg.start, seg.stop) == (t, 5)
+
+
+def test_program_shape_key_buckets():
+    groups, _, _ = _mk_groups(sizes=(2, 3, 1))
+    prog = compile_split_program(groups, "D")
+    assert prog.sizes == (2, 3, 1)
+    assert prog.buckets == (2, 4, 1)
+    # padded shape keys collapse any in-bucket size to one compile key
+    groups2, _, _ = _mk_groups(sizes=(2, 4, 1))
+    prog2 = compile_split_program(groups2, "D")
+    assert prog.shape_key() != prog2.shape_key()
+    assert prog.shape_key(padded=True) == prog2.shape_key(padded=True)
+
+
+# ---------------------------------------------------------------------------
+# executor bit-exactness vs the legacy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("net", ["G", "D"])
+@pytest.mark.parametrize("concat_groups", [True, False])
+def test_make_apply_bitexact_vs_legacy(net, concat_groups):
+    groups, _, _ = _mk_groups()
+    client, server = _init_state(groups, net, jax.random.PRNGKey(1))
+    inputs = _mk_inputs(groups, net, batch=4)
+    new = jax.jit(build_net_apply(groups, net, capture_middle=True,
+                                  concat_groups=concat_groups),
+                  static_argnums=(3,))
+    old = jax.jit(build_net_apply_legacy(groups, net, capture_middle=True,
+                                         concat_groups=concat_groups),
+                  static_argnums=(3,))
+    for train in (True, False):
+        got = new(client, server, inputs, train)
+        want = old(client, server, inputs, train)
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(want)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trainer_split_program_flag_bitexact():
+    """One full training step + federation under split_program=True is
+    bit-identical to the legacy oracle path (False)."""
+    states = {}
+    for flag in (True, False):
+        cfg = HuSCFConfig(batch=8, federate_every=1, seed=0,
+                          steps_per_epoch=1, warmup_fed_rounds=0,
+                          split_program=flag)
+        clients = mk_clients(4)
+        devices = [PAPER_DEVICES[i % 2] for i in range(4)]
+        tr = HuSCFTrainer(clients, devices, config=cfg, ga_config=GA)
+        tr.train_steps(1)
+        tr.federate()
+        states[flag] = jax.tree_util.tree_leaves(
+            {"G": tr.state["G"], "D": tr.state["D"]})
+    assert len(states[True]) == len(states[False])
+    for a, b in zip(states[True], states[False]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 7/8 schedule machinery
+# ---------------------------------------------------------------------------
+
+def test_join_barrier_scan_matches_host_recurrence():
+    rng = np.random.default_rng(0)
+    terms = rng.uniform(0, 1, 7).astype(np.float32)
+    barriers = rng.uniform(0, 2, 7).astype(np.float32)
+    got = np.asarray(join_barrier_scan(jnp.asarray(terms),
+                                       jnp.asarray(barriers)))
+    s, want = 0.0, []
+    for a, bar in zip(terms, barriers):
+        s = max(s + a, bar)
+        want.append(s)
+    np.testing.assert_allclose(got, np.asarray(want, np.float32), rtol=1e-6)
+    # reverse sweep (Eq. 8): same recurrence from the top layer down
+    got_r = np.asarray(join_barrier_scan(jnp.asarray(terms),
+                                         jnp.asarray(barriers),
+                                         reverse=True))
+    s, want_r = 0.0, []
+    for a, bar in zip(terms[::-1], barriers[::-1]):
+        s = max(s + a, bar)
+        want_r.append(s)
+    np.testing.assert_allclose(got_r, np.asarray(want_r[::-1], np.float32),
+                               rtol=1e-6)
+
+
+def test_program_latency_equals_host_model():
+    """program_iteration_latency from the compiled programs == the
+    member-expanded host Eq. 7-10 model, exactly."""
+    groups, devices, cuts = _mk_groups()
+    prog_g = compile_split_program(groups, "G")
+    prog_d = compile_split_program(groups, "D")
+    profiles = {g.name: g.profile for g in groups}
+    got = program_iteration_latency(prog_g, prog_d, profiles,
+                                    PAPER_SERVER, batch=64)
+    want = huscf_iteration_latency(cuts, devices, PAPER_SERVER, batch=64)
+    assert math.isclose(got, want, rel_tol=1e-12)
+
+
+def test_program_latency_counts_override():
+    """counts= rebills the schedule for a serving cohort: more requests
+    on a cut monotonically raises the forward latency."""
+    groups, _, _ = _mk_groups()
+    prog = compile_split_program(groups, "G")
+    profiles = {g.name: g.profile for g in groups}
+    base = {g.name: 1.0 for g in groups}
+    lo, _ = program_net_latency(prog, profiles, batch=1, counts=base)
+    hi, _ = program_net_latency(
+        prog, profiles, batch=1,
+        counts={g: 4.0 * c for g, c in base.items()})
+    assert hi > lo > 0.0

@@ -1,0 +1,97 @@
+"""Regroup edge cases in core/splitting.py (churn semantics the
+SplitProgram consumers rely on): profile-collision merges, empty-group
+elimination, and server-union shrinkage when the last delegator of a
+layer leaves.
+"""
+import jax
+import numpy as np
+
+from repro.core.latency import Cut, DeviceProfile, PAPER_DEVICES
+from repro.core.segments import compile_split_program
+from repro.core.splitting import (bucket_size, group_by_profile,
+                                  server_union_span)
+
+D1, D2, D3 = PAPER_DEVICES[0], PAPER_DEVICES[1], PAPER_DEVICES[2]
+
+
+def test_group_merge_on_profile_collision():
+    """Clients with the same (profile, cut) merge into ONE group even
+    when interleaved with others; global order is preserved inside the
+    group and group names sort deterministically."""
+    devices = [D1, D2, D1, D3, D1, D2]
+    cuts = [Cut(1, 4, 1, 4), Cut(2, 3, 2, 3), Cut(1, 4, 1, 4),
+            Cut(1, 3, 1, 3), Cut(1, 4, 1, 4), Cut(2, 3, 2, 3)]
+    groups = group_by_profile(devices, cuts)
+    assert len(groups) == 3
+    by_name = {g.name: g for g in groups}
+    assert by_name[f"device1|{(1, 4, 1, 4)}"].client_ids == [0, 2, 4]
+    assert by_name[f"device2|{(2, 3, 2, 3)}"].client_ids == [1, 5]
+    assert by_name[f"device3|{(1, 3, 1, 3)}"].client_ids == [3]
+    assert [g.name for g in groups] == sorted(g.name for g in groups)
+
+
+def test_same_device_different_cut_does_not_merge():
+    """The merge key is (profile, cut) — one device class re-cut two
+    ways stays two groups (their client segments have different
+    owned-layer sets and cannot stack)."""
+    devices = [D1, D1]
+    cuts = [Cut(1, 4, 1, 4), Cut(2, 3, 2, 3)]
+    groups = group_by_profile(devices, cuts)
+    assert len(groups) == 2
+    assert {g.size for g in groups} == {1}
+
+
+def test_empty_group_elimination_on_churn():
+    """Regrouping after every member of a group leaves produces no
+    empty group — and the compiled program loses that cut's join
+    barriers entirely."""
+    devices = [D1, D1, D2, D3]
+    cuts = [Cut(1, 4, 1, 4)] * 2 + [Cut(2, 3, 2, 3), Cut(2, 4, 2, 4)]
+    before = group_by_profile(devices, cuts)
+    assert len(before) == 3
+    # both device1 clients leave
+    after = group_by_profile(devices[2:], cuts[2:])
+    assert len(after) == 2
+    assert all(g.size > 0 for g in after)
+    assert not any(g.name.startswith("device1") for g in after)
+    prog = compile_split_program(after, "G")
+    joins = [g for s in prog.steps for g in s.joins]
+    assert sorted(joins) == sorted(g.name for g in after)
+    # ids re-enumerate over the surviving population (the trainer owns
+    # any global-id remapping; groups are positional)
+    assert sorted(cid for g in after for cid in g.client_ids) == [0, 1]
+
+
+def test_server_union_shrinks_when_last_delegator_leaves():
+    """Only the device1 group delegates layer 3; once it is gone the
+    union span (and the compiled server trunk) shrinks."""
+    devices = [D1, D2, D3]
+    cuts = [Cut(1, 4, 1, 4), Cut(2, 3, 2, 3), Cut(2, 3, 2, 3)]
+    groups = group_by_profile(devices, cuts)
+    assert server_union_span(groups, "G", 5) == [1, 2, 3]
+    shrunk = group_by_profile(devices[1:], cuts[1:])
+    assert server_union_span(shrunk, "G", 5) == [2]
+    prog = compile_split_program(shrunk, "G")
+    assert prog.server_span() == (2,)
+    # the single remaining layer both joins and departs every group
+    (step,) = prog.steps
+    assert step.joins == step.departs == prog.group_names
+
+
+def test_server_union_grows_on_join():
+    """A joiner with a wider cut extends the span — layers no incumbent
+    delegates appear in the compiled trunk."""
+    devices = [D2, D3]
+    cuts = [Cut(2, 3, 2, 3), Cut(2, 3, 2, 3)]
+    assert server_union_span(group_by_profile(devices, cuts), "G", 5) == [2]
+    grown = group_by_profile(devices + [D1], cuts + [Cut(1, 4, 1, 4)])
+    assert server_union_span(grown, "G", 5) == [1, 2, 3]
+
+
+def test_bucket_size_boundaries():
+    assert [bucket_size(n) for n in (0, 1, 2, 3, 4, 5, 8, 9, 1023)] == \
+        [1, 1, 2, 4, 4, 8, 8, 16, 1024]
+    np.testing.assert_raises(ValueError, bucket_size, -1)
+    # idempotent on its own outputs (buckets are stable keys)
+    for n in (1, 2, 4, 64):
+        assert bucket_size(bucket_size(n)) == bucket_size(n)

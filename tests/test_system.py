@@ -53,8 +53,10 @@ def test_federation_diagnostics(trained_trainer):
     assert 1 <= diag["k"] <= 6
     w = diag["weights"]
     for c in np.unique(diag["labels"]):
+        # weights are f32: a per-cluster partition can legitimately sum
+        # a few ULPs (1 ULP at 1.0 = 1.19e-7) away from exactly 1.0
         np.testing.assert_allclose(w[diag["labels"] == c].sum(), 1.0,
-                                   atol=1e-8)
+                                   atol=5e-7)
 
 
 def test_label_kld_variant(trained_trainer):
